@@ -1,0 +1,57 @@
+"""End-to-end training driver evidence: a mid-size decoder (≈27M params)
+trained for 300 steps on the learnable synthetic stream, with periodic
+fingerprinted checkpoints — the CPU-scale stand-in for the assignment's
+"train a ~100M model for a few hundred steps" driver (the same code path
+pjit-shards on the production mesh; see launch/train.py / dryrun.py).
+
+    PYTHONPATH=src python examples/train_e2e.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from repro.configs import get_config
+from repro.models import init_params
+from repro.train import checkpoint as ckpt
+from repro.train.data import Prefetcher, SyntheticLM
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.train_step import make_train_step
+
+STEPS = 300
+cfg = dataclasses.replace(
+    get_config("llama3.2-3b").smoke(),
+    n_layers=8, d_model=384, n_heads=6, n_kv=2, head_dim=64, d_ff=1024,
+    vocab=8192,
+)
+cfg.validate()
+params = init_params(cfg, jax.random.key(0))
+n_params = sum(p.size for p in jax.tree_util.tree_leaves(params))
+print(f"model: {n_params/1e6:.1f}M params, {cfg.n_layers}L d={cfg.d_model}")
+
+opt_cfg = AdamWConfig(lr=6e-4, warmup=20, decay_steps=STEPS, weight_decay=0.01)
+opt = adamw_init(params)
+step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+loader = SyntheticLM(cfg, seq=128, batch=8, pattern="arith")
+pf = Prefetcher(loader)
+t0 = time.time()
+try:
+    for _ in range(STEPS):
+        s, batch = pf.next()
+        params, opt, m = step_fn(
+            params, opt, jax.tree_util.tree_map(jnp.asarray, batch)
+        )
+        if s % 25 == 0 or s == STEPS - 1:
+            print(f"step {s:4d} loss={float(m['loss']):.4f} "
+                  f"gnorm={float(m['gnorm']):.3f} "
+                  f"({(time.time()-t0)/(s+1)*1e3:.0f} ms/step)")
+        if (s + 1) % 100 == 0:
+            ckpt.save("/tmp/train_e2e_ck", s + 1, {"params": params, "opt": opt})
+finally:
+    pf.close()
+final = float(m["loss"])
+print(f"final loss {final:.4f} (init ~ln({cfg.vocab})={jnp.log(cfg.vocab):.2f})")
+assert final < 3.0, "expected large loss reduction on the arithmetic stream"
+print("trained 300 steps with periodic fingerprinted checkpoints ✓")

@@ -1,0 +1,9 @@
+"""repro — RNS-comparison framework (Didier et al.) on JAX/TPU.
+
+x64 is enabled globally: the RNS core needs genuine int64 lanes for 31-bit
+moduli profiles and for the tensor<->RNS codecs.  All model/training code is
+dtype-explicit (bf16/f32/int32) so this does not change numerics elsewhere.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

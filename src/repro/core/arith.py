@@ -1,0 +1,56 @@
+"""Channel-wise RNS arithmetic on batched residue tensors.
+
+Residue tensors have shape ``(..., n)`` — the trailing axis is the RNS
+channel axis.  All ops are exact ring operations mod m_i per channel and are
+vectorization-friendly: on TPU the batch dims map onto VPU lanes while the
+small channel axis stays in-register (DESIGN.md §3).
+
+Overflow discipline (the reason ``bits<=15`` ⇒ int32 lanes is safe):
+  * add/sub intermediates are in (-m, 2m) ⊂ int32,
+  * products of two reduced residues are < 2**30,
+  * data-parallel psum of <=2**16 residues is < 2**31.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .base import RNSBase
+
+__all__ = ["add", "sub", "mul", "neg", "mul_const", "modt"]
+
+
+def _m(base: RNSBase, like):
+    return jnp.asarray(base.moduli_np, dtype=like.dtype)
+
+
+def modt(base: RNSBase, x):
+    """Reduce an (over-ranged but in-dtype) tensor channel-wise mod m_i."""
+    return jnp.mod(x, _m(base, x))
+
+
+def add(base: RNSBase, x, y):
+    m = _m(base, x)
+    s = x + y
+    return jnp.where(s >= m, s - m, s)
+
+
+def sub(base: RNSBase, x, y):
+    m = _m(base, x)
+    d = x - y
+    return jnp.where(d < 0, d + m, d)
+
+
+def neg(base: RNSBase, x):
+    m = _m(base, x)
+    return jnp.where(x == 0, x, m - x)
+
+
+def mul(base: RNSBase, x, y):
+    """Product of reduced residues; fits the lane dtype by construction."""
+    return jnp.mod(x * y, _m(base, x))
+
+
+def mul_const(base: RNSBase, x, c):
+    """x * c with c a per-channel constant vector (n,) of reduced residues."""
+    c = jnp.asarray(c, dtype=x.dtype)
+    return jnp.mod(x * c, _m(base, x))

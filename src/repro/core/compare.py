@@ -1,0 +1,83 @@
+"""RNS comparison — the paper's contribution (Algorithm 1) plus baselines.
+
+``rns_compare_ge`` implements Algorithm 1 / Theorem 1:
+
+    Delta' = (n_a^(1) - n_a^(2)) mod m_a
+    z      = (N1 - N2) channel-wise in B            (= (N1-N2) mod M)
+    Delta  = to_ma(MRC(z))                          (= ((N1-N2) mod M) mod m_a)
+    N1 >= N2  <=>  Delta == Delta'
+
+One MRC + one Alg.3 dot = (n(n-1)/2 + n) modular mults — half the classical
+method's n(n-1).  Valid on the FULL range 0 <= N1,N2 < M with no moduli-form
+or bound restrictions (the properties tests assert).
+
+Baselines implemented for the paper's comparisons:
+  * ``classic_compare_ge``  — two MRCs + lexicographic digit compare
+    (Szabo–Tanaka / Flores; the paper's Table 1 opponent).
+  * ``approx_crt_ge``       — Kawamura/Xiao-style fractional-CRT position
+    comparison; fast but WRONG for operands closer than the rounding error,
+    demonstrating why the paper rejects approximate methods for exactness.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import arith
+from .base import RNSBase
+from .convert import to_ma
+from .mrc import mrc, mrc_unrolled, mrs_ge
+
+__all__ = ["rns_compare_ge", "classic_compare_ge", "approx_crt_ge", "compare_packed_ge"]
+
+
+def rns_compare_ge(base: RNSBase, x1, xa1, x2, xa2, *, unroll: bool = False):
+    """Algorithm 1.  All args batched: x*: (..., n), xa*: (...,).
+
+    Returns a boolean tensor: True where N1 >= N2.
+    """
+    ma = base.ma
+    delta_p = jnp.mod(xa1 - xa2, ma)                 # line 1
+    z = arith.sub(base, x1, x2)                      # line 2
+    digits = (mrc_unrolled if unroll else mrc)(base, z)  # line 3 (Alg. 2)
+    delta = to_ma(base, digits)                      # line 4 (Alg. 3)
+    return delta == delta_p                          # lines 5-9 (Thm. 1)
+
+
+def compare_packed_ge(base: RNSBase, p1, p2, *, unroll: bool = True):
+    """Alg. 1 on 'packed' tensors (..., n+1) whose last channel is the
+    redundant residue.  This is the layout the gradient codec carries so the
+    redundant channel rides along through every ring op."""
+    return rns_compare_ge(
+        base, p1[..., :-1], p1[..., -1], p2[..., :-1], p2[..., -1], unroll=unroll
+    )
+
+
+def classic_compare_ge(base: RNSBase, x1, x2, *, unroll: bool = False):
+    """Classical method: MRC both operands, compare digits lexicographically.
+
+    Cost: n(n-1) modular mults + n digit compares (paper Table 1, row 2).
+    Needs no redundant modulus — that is the trade the paper makes.
+    """
+    f = mrc_unrolled if unroll else mrc
+    return mrs_ge(f(base, x1), f(base, x2))
+
+
+def approx_crt_ge(base: RNSBase, x1, x2, *, frac_bits: int = 30):
+    """Approximate-CRT comparison baseline (Kawamura-style fractions).
+
+    Position of X in [0,1):  pos(X) ~= sum_i |x_i * Mi^{-1}|_{m_i} / m_i mod 1.
+    Compare pos(N1) vs pos(N2) in fixed point.  Exact only when
+    |N1 - N2| / M exceeds the accumulated rounding error (~ n * 2^-frac_bits
+    + quantization); tests and benchmarks exhibit the failure band, which is
+    the paper's argument for an exact method.
+    """
+    mi_inv = jnp.asarray(base.Mi_inv_np, dtype=x1.dtype)
+    m = jnp.asarray(base.moduli_np, dtype=x1.dtype)
+
+    def pos(x):
+        xi = jnp.mod(x * mi_inv, m).astype(jnp.int64)  # |x_i Mi^{-1}|_{m_i}
+        # fixed-point xi / m_i with frac_bits fractional bits
+        fr = (xi << frac_bits) // m.astype(jnp.int64)
+        return jnp.mod(jnp.sum(fr, axis=-1), jnp.int64(1) << frac_bits)
+
+    return pos(x1) >= pos(x2)

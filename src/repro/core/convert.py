@@ -1,0 +1,101 @@
+"""Conversions: Python ints <-> RNS, MRS -> residue mod m_a (Alg. 3),
+and fixed-width integer tensors <-> RNS residue tensors.
+
+``to_ma`` is Algorithm 3 of the paper: given the mixed-radix digits of X,
+compute X mod m_a as a dot product against the precomputed partial products
+``beta_i = prod_{j<i} m_j mod m_a``.  Cost: n modular mults + (n-1) adds —
+the paper's count — and the reduction tree is O(log n) depth in parallel.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .base import RNSBase
+
+__all__ = [
+    "to_ma",
+    "mrs_dot_mod",
+    "int_to_rns",
+    "rns_to_int",
+    "tensor_to_rns",
+    "rns_to_tensor",
+]
+
+
+def to_ma(base: RNSBase, digits):
+    """Alg. 3: X mod m_a from mixed-radix digits ``(..., n)`` -> ``(...,)``.
+
+    Per-term reduction keeps the accumulator small: each term < m_a <= 2**15,
+    so the sum over n <= 2**16 channels stays < 2**31 (int32-safe).
+    """
+    betas = jnp.asarray(base.betas_ma_np, dtype=digits.dtype)
+    terms = jnp.mod(digits * betas, jnp.asarray(base.ma, dtype=digits.dtype))
+    return jnp.mod(jnp.sum(terms, axis=-1), base.ma)
+
+
+def mrs_dot_mod(base: RNSBase, digits, targets: tuple[int, ...]):
+    """Multi-target Alg. 3: X mod m_t for each target, shape (..., T).
+
+    This is the exact MRC-based base extension's backward half — a dot
+    product per target modulus, log-depth in parallel.
+    """
+    betas = jnp.asarray(base.betas_for(targets), dtype=digits.dtype)  # (T, n)
+    mt = jnp.asarray(np.asarray(targets), dtype=digits.dtype)  # (T,)
+    terms = jnp.mod(digits[..., None, :] * betas, mt[:, None])
+    return jnp.mod(jnp.sum(terms, axis=-1), mt)
+
+
+# --------------------------------------------------------------------------
+# Exact host-side conversions (tests, checkpoint fingerprints, crypto I/O)
+# --------------------------------------------------------------------------
+
+
+def int_to_rns(base: RNSBase, x: int) -> np.ndarray:
+    """Residues of a Python int (negative x embeds as x mod M)."""
+    return base.residues_of(x)
+
+
+def rns_to_int(base: RNSBase, residues) -> int:
+    """Exact value in [0, M) via CRT on Python ints (host-side oracle)."""
+    x = 0
+    for r, m in zip(np.asarray(residues).tolist(), base.moduli):
+        Mi = base.M // m
+        x = (x + (int(r) * pow(Mi, -1, m) % m) * Mi) % base.M
+    return x
+
+
+# --------------------------------------------------------------------------
+# Tensor codecs (gradient aggregation path)
+# --------------------------------------------------------------------------
+
+
+def tensor_to_rns(base: RNSBase, x):
+    """Integer tensor -> residue tensor ``(..., n)``.
+
+    Works for signed x: since m_i | M, (x mod m_i) == ((x mod M) mod m_i) and
+    ``jnp.mod`` already returns non-negative remainders.  |x| must be < M/2
+    for the signed embedding to round-trip.
+    """
+    m = jnp.asarray(base.moduli_np)
+    return jnp.mod(x[..., None].astype(jnp.int64), m.astype(jnp.int64)).astype(
+        base.dtype
+    )
+
+
+def rns_to_tensor(base: RNSBase, digits_or_residues, *, from_digits=False):
+    """Residue tensor -> int64 values in [0, M) via MRC + Horner.
+
+    Requires M < 2**63 (true for the codec bases: n<=4, 15-bit moduli).
+    Pass mixed-radix digits with ``from_digits=True`` to skip the MRC.
+    """
+    from .mrc import mrc_unrolled
+
+    if base.M >= 1 << 62:
+        raise ValueError("rns_to_tensor requires M < 2**62; use rns_to_int")
+    d = digits_or_residues if from_digits else mrc_unrolled(base, digits_or_residues)
+    d = d.astype(jnp.int64)
+    acc = d[..., base.n - 1]
+    for i in range(base.n - 2, -1, -1):
+        acc = acc * int(base.moduli[i]) + d[..., i]
+    return acc

@@ -1,0 +1,119 @@
+"""RNS division and scaling built on the paper's comparison.
+
+The paper's conclusion names division/scaling as the operations its
+comparison unlocks.  We implement classical restoring division in pure RNS:
+every magnitude decision is one Algorithm-1 comparison, and the only extra
+machinery is doubling (add) and exact halving (parity via mixed-radix digit
+sum — all moduli odd ⇒ beta_i ≡ 1 mod 2 ⇒ X mod 2 = sum a_i mod 2).
+
+Operands travel as *packed* tensors (..., n+1) — base residues plus the
+redundant m_a channel — so comparisons never need a fresh conversion.
+
+Wrap discipline: doubling D inside the ring wraps mod M once D·2^j >= M.
+A wrapped rung of the ladder would compare arbitrarily, so the up-phase
+detects wraps with the comparison itself (2d >= d fails iff wrap: the
+wrapped value 2d−M is < d < M) and the down-phase masks those rungs out.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import arith
+from .base import RNSBase
+from .compare import compare_packed_ge
+from .mrc import mrc
+
+__all__ = ["pack", "unpack", "divmod_rns", "halve", "scale_pow2", "parity"]
+
+
+def pack(base: RNSBase, x, xa):
+    return jnp.concatenate([x, xa[..., None].astype(x.dtype)], axis=-1)
+
+
+def unpack(packed):
+    return packed[..., :-1], packed[..., -1]
+
+
+def padd(base, p, q):
+    x = arith.add(base, p[..., :-1], q[..., :-1])
+    xa = jnp.mod(p[..., -1] + q[..., -1], base.ma)
+    return pack(base, x, xa)
+
+
+def psub(base, p, q):
+    x = arith.sub(base, p[..., :-1], q[..., :-1])
+    xa = jnp.mod(p[..., -1] - q[..., -1], base.ma)
+    return pack(base, x, xa)
+
+
+def parity(base: RNSBase, x):
+    """X mod 2 from base residues (all moduli odd)."""
+    return jnp.mod(jnp.sum(mrc(base, x), axis=-1), 2)
+
+
+def halve(base: RNSBase, packed):
+    """Exact floor(X/2): subtract the parity bit, multiply by 2^{-1}."""
+    x, xa = unpack(packed)
+    p = parity(base, x).astype(x.dtype)
+    x = arith.sub(base, x, jnp.broadcast_to(p[..., None], x.shape))
+    xa = jnp.mod(xa - p, base.ma)
+    x = arith.mul_const(base, x, base.inv2_np)
+    xa = jnp.mod(xa * base.inv2_ma, base.ma)
+    return pack(base, x, xa)
+
+
+def scale_pow2(base: RNSBase, packed, k: int):
+    """floor(X / 2^k) — the paper's 'scaling' application, k exact halvings."""
+    for _ in range(k):
+        packed = halve(base, packed)
+    return packed
+
+
+def divmod_rns(base: RNSBase, xp, dp, *, iters: int | None = None):
+    """(Q, R) with X = Q*D + R, 0 <= R < D, entirely in RNS.
+
+    Restoring division.  Up-phase builds the ladder d·2^j (j = 0..nbits) with
+    per-rung wrap flags; down-phase walks j = nbits..0, subtracting where the
+    Algorithm-1 comparison allows, accumulating Q by Horner (Q = 2Q + bit_j).
+    Total comparisons: 2·nbits+1, each one MRC.
+
+    Inputs/outputs are packed (..., n+1).  D must be nonzero.
+    """
+    nbits = iters if iters is not None else base.M.bit_length()
+
+    def up(carry, _):
+        d, valid = carry
+        d2 = padd(base, d, d)
+        # 2d >= d holds iff no wrap (wrapped value is 2d - M < d).
+        valid2 = valid & compare_packed_ge(base, d2, d)
+        return (d2, valid2), (d2, valid2)
+
+    valid0 = jnp.ones(xp.shape[:-1], dtype=bool)
+    (_, _), (ladder, valids) = jax.lax.scan(up, (dp, valid0), None, length=nbits)
+    # Prepend rung j=0 (d itself, always valid).
+    ladder = jnp.concatenate([dp[None], ladder], axis=0)  # (nbits+1, ..., n+1)
+    valids = jnp.concatenate([valid0[None], valids], axis=0)
+
+    zero = jnp.zeros_like(xp)
+
+    def down(carry, rung):
+        q, r = carry
+        d_j, valid_j = rung
+        bit = compare_packed_ge(base, r, d_j) & valid_j
+        bitx = bit[..., None]
+        r = jnp.where(bitx, psub(base, r, d_j), r)
+        # Q = 2Q + bit  (Horner over the quotient bits, in RNS).
+        q2 = padd(base, q, q)
+        q2p1 = padd(base, q2, _one_like(base, q))
+        q = jnp.where(bitx, q2p1, q2)
+        return (q, r), None
+
+    (q, r), _ = jax.lax.scan(
+        down, (zero, xp), (ladder[::-1], valids[::-1])
+    )
+    return q, r
+
+
+def _one_like(base: RNSBase, packed):
+    return jnp.ones_like(packed)  # residues of 1 are all 1 (moduli > 1)

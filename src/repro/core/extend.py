@@ -1,0 +1,83 @@
+"""Base extension: convert residues in base B to residues in a target base.
+
+Three methods, mirroring the paper's §2.1 taxonomy:
+
+* ``extend_mrc``      — exact, via MRC + multi-target Alg. 3 dot.  The method
+  the paper builds on (no bounds, no special moduli).
+* ``extend_shenoy``   — exact CRT-form extension using a redundant residue
+  (Shenoy–Kumaresan).  Requires x_r == X mod m_r to be TRUE — the paper's §2
+  explains how that premise breaks for channel-wise differences, which is
+  precisely why the comparison algorithm exists.
+* ``extend_kawamura`` — approximate CRT (Cox–Rower).  k can be off by one
+  near the top of the range; exposed so benchmarks can chart the error band.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .base import RNSBase
+from .convert import mrs_dot_mod
+from .mrc import mrc
+
+__all__ = ["extend_mrc", "extend_shenoy", "extend_kawamura"]
+
+
+def extend_mrc(base: RNSBase, x, targets: tuple[int, ...]):
+    """Exact extension of ``x: (..., n)`` to residues mod each target, (..., T)."""
+    return mrs_dot_mod(base, mrc(base, x), targets)
+
+
+def _xi(base: RNSBase, x):
+    """CRT coefficients xi_i = |x_i * Mi^{-1}|_{m_i}."""
+    mi_inv = jnp.asarray(base.Mi_inv_np, dtype=x.dtype)
+    m = jnp.asarray(base.moduli_np, dtype=x.dtype)
+    return jnp.mod(x * mi_inv, m)
+
+
+def extend_shenoy(base: RNSBase, x, xr, mr: int, targets: tuple[int, ...]):
+    """Shenoy–Kumaresan: exact, given the redundant residue xr = X mod m_r.
+
+    Y = sum xi_i M_i = X + k M with 0 <= k < n, so k is recovered mod m_r
+    (requires m_r > n) and subtracted off in each target channel.
+    """
+    if mr <= base.n:
+        raise ValueError("Shenoy extension needs m_r > n")
+    xi = _xi(base, x)  # (..., n)
+    dt = jnp.int64
+
+    mi_mod_r = jnp.asarray(base.Mi_mod((mr,))[0], dtype=dt)  # (n,)
+    y_mod_r = jnp.mod(jnp.sum(jnp.mod(xi.astype(dt) * mi_mod_r, mr), axis=-1), mr)
+    m_inv_r = pow(base.M % mr, -1, mr)
+    k = jnp.mod((y_mod_r - xr.astype(dt)) * m_inv_r, mr)  # exact k, < n
+
+    mi_mod_t = jnp.asarray(base.Mi_mod(targets), dtype=dt)  # (T, n)
+    m_mod_t = jnp.asarray(base.M_mod(targets), dtype=dt)  # (T,)
+    mt = jnp.asarray(np.asarray(targets), dtype=dt)
+    s = jnp.sum(jnp.mod(xi.astype(dt)[..., None, :] * mi_mod_t, mt[:, None]), axis=-1)
+    out = jnp.mod(s - k[..., None] * m_mod_t, mt)
+    return out.astype(x.dtype)
+
+
+def extend_kawamura(
+    base: RNSBase, x, targets: tuple[int, ...], *, alpha: float = 0.5, q: int = 8
+):
+    """Kawamura et al. (Cox–Rower) approximate extension.
+
+    k ~= floor(sum_i xi_i / m_i + alpha) approximated with the top q bits of
+    xi_i (moduli are ~2^bits so xi/m ~ xi >> (bits - q)).  Exact except when
+    X falls within ~(1-alpha)·M of the range top (or alpha·M of 0 for the
+    down-rounding direction) — the bound the paper cites as disqualifying
+    for full-range comparison.
+    """
+    xi = _xi(base, x)
+    dt = jnp.int64
+    trunc = (xi.astype(dt) >> (base.bits - q)).astype(dt)
+    k = (jnp.sum(trunc, axis=-1) + int(alpha * (1 << q))) >> q  # (...,)
+
+    mi_mod_t = jnp.asarray(base.Mi_mod(targets), dtype=dt)
+    m_mod_t = jnp.asarray(base.M_mod(targets), dtype=dt)
+    mt = jnp.asarray(np.asarray(targets), dtype=dt)
+    s = jnp.sum(jnp.mod(xi.astype(dt)[..., None, :] * mi_mod_t, mt[:, None]), axis=-1)
+    out = jnp.mod(s - k[..., None] * m_mod_t, mt)
+    return out.astype(x.dtype)

@@ -1,0 +1,83 @@
+"""Dual-base RNS Montgomery modular multiplication (Bajard–Didier–Kornerup).
+
+This is the paper's motivating context (§1, §3): cryptographic modular
+multiplication keeps every operand in TWO RNS bases B and B', and one modulus
+of B' doubles as the paper's redundant modulus m_a — which is why "the
+redundant residue is readily available" and comparison costs only ONE
+conversion.
+
+Algorithm (MM(X, Y) = X·Y·M^{-1} mod N, operands in both bases):
+
+    q   <- x·y·(-N^{-1})  in B            (q < M)
+    q'  <- extend(q)      B  -> B'         (exact MRC extension)
+    r'  <- (x'·y' + q'·N)·M^{-1}  in B'    (exact division by M)
+    r   <- extend(r')     B' -> B
+    result r == X·Y·M^{-1} (mod N),  r < 2N   (needs M > 4N, M' > 2N)
+
+Both extensions here use the exact MRC path (extend_mrc); the Kawamura
+variant is available for benchmarking the approximate trade-off.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import arith
+from .base import RNSBase
+from .extend import extend_kawamura, extend_mrc
+
+__all__ = ["RNSMontgomery", "DualRep"]
+
+
+@dataclasses.dataclass
+class DualRep:
+    """An operand held in both bases: xB (..., n), xBp (..., n')."""
+
+    xB: jnp.ndarray
+    xBp: jnp.ndarray
+
+
+class RNSMontgomery:
+    def __init__(self, baseB: RNSBase, baseBp: RNSBase, N: int):
+        if not (baseB.M > 4 * N and baseBp.M > 2 * N):
+            raise ValueError("need M > 4N and M' > 2N for bounded outputs")
+        import math
+
+        if math.gcd(baseB.M, baseBp.M) != 1:
+            raise ValueError("bases must be coprime")
+        self.B, self.Bp, self.N = baseB, baseBp, N
+        # -N^{-1} mod m_i (channel constants in B)
+        self.negNinv_B = np.asarray(
+            [(-pow(N, -1, m)) % m for m in baseB.moduli], dtype=baseB.dtype
+        )
+        self.N_Bp = np.asarray([N % m for m in baseBp.moduli], dtype=baseBp.dtype)
+        self.Minv_Bp = np.asarray(
+            [pow(baseB.M % m, -1, m) for m in baseBp.moduli], dtype=baseBp.dtype
+        )
+
+    def to_dual(self, x: int) -> DualRep:
+        return DualRep(
+            jnp.asarray(self.B.residues_of(x)), jnp.asarray(self.Bp.residues_of(x))
+        )
+
+    def from_dual(self, d: DualRep) -> int:
+        from .convert import rns_to_int
+
+        return rns_to_int(self.B, np.asarray(d.xB))
+
+    def mul(self, x: DualRep, y: DualRep, *, approx: bool = False) -> DualRep:
+        """Montgomery product X·Y·M^{-1} mod N (result < 2N), batched."""
+        B, Bp = self.B, self.Bp
+        q = arith.mul_const(B, arith.mul(B, x.xB, y.xB), self.negNinv_B)
+        if approx:
+            qp = extend_kawamura(B, q, Bp.moduli)
+        else:
+            qp = extend_mrc(B, q, Bp.moduli)
+        t = arith.add(
+            Bp, arith.mul(Bp, x.xBp, y.xBp), arith.mul_const(Bp, qp, self.N_Bp)
+        )
+        rp = arith.mul_const(Bp, t, self.Minv_Bp)
+        r = extend_mrc(Bp, rp, B.moduli)
+        return DualRep(xB=r, xBp=rp)

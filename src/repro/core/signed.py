@@ -1,0 +1,61 @@
+"""Signed-value embedding on top of the RNS ring, with sign/magnitude tests
+driven by the paper's comparison (Algorithm 1).
+
+A signed v with |v| < M/2 embeds as X = v mod M.  Then:
+
+    v >= 0   <=>   X < ceil(M/2)   <=>   NOT RNSComp_ge(X, ceil(M/2))
+
+so *sign detection costs exactly one comparison* — one MRC — instead of a
+full reconstruction.  This is the primitive the gradient codec uses for
+overflow checks and magnitude clipping (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .base import RNSBase
+from .compare import rns_compare_ge
+
+__all__ = ["encode_signed", "is_negative", "abs_ge_threshold"]
+
+
+def encode_signed(base: RNSBase, v):
+    """Signed int tensor -> packed residue tensor (..., n+1), last = m_a."""
+    from .convert import tensor_to_rns
+
+    res = tensor_to_rns(base, v)
+    # redundant channel must hold (v mod M) mod m_a == v mod m_a shifted into
+    # [0, m_a) the same way (m_a does NOT divide M, so correct via M mod m_a).
+    v64 = v.astype(jnp.int64)
+    xa = jnp.mod(v64, base.ma)
+    xa = jnp.where(v64 < 0, jnp.mod(xa + base.M_mod_ma, base.ma), xa)
+    return jnp.concatenate([res, xa[..., None].astype(res.dtype)], axis=-1)
+
+
+def is_negative(base: RNSBase, packed):
+    """True where the packed value encodes v < 0.  One Alg.-1 comparison."""
+    x, xa = packed[..., :-1], packed[..., -1]
+    t = jnp.asarray(base.half_M_residues, dtype=x.dtype)
+    t = jnp.broadcast_to(t, x.shape)
+    ta = jnp.asarray(base.half_M_ma, dtype=xa.dtype)
+    ta = jnp.broadcast_to(ta, xa.shape)
+    return rns_compare_ge(base, x, xa, t, ta, unroll=True)  # X >= ceil(M/2)
+
+
+def abs_ge_threshold(base: RNSBase, packed, thr: int):
+    """True where |v| >= thr (0 < thr < M/2).  Two Alg.-1 comparisons:
+
+        v >= 0:  X >= thr
+        v <  0:  X <= M - thr   i.e.  NOT (X >= M - thr + 1)
+    """
+    x, xa = packed[..., :-1], packed[..., -1]
+
+    def cmp_const(c: int):
+        cr = jnp.broadcast_to(jnp.asarray(base.residues_of(c), dtype=x.dtype), x.shape)
+        ca = jnp.broadcast_to(jnp.asarray(c % base.ma, dtype=xa.dtype), xa.shape)
+        return rns_compare_ge(base, x, xa, cr, ca, unroll=True)
+
+    neg = is_negative(base, packed)
+    ge_thr = cmp_const(thr)                    # pos case: X >= thr
+    ge_mirror = cmp_const(base.M - thr + 1)    # neg case: X > M - thr fails
+    return jnp.where(neg, ~ge_mirror, ge_thr)

@@ -1,0 +1,62 @@
+"""Shared in-kernel primitives for the RNS Pallas kernels.
+
+TPU adaptation notes (DESIGN.md §3):
+
+* Layout is **(n, B)** — channels on sublanes, batch on the 128-wide lane
+  axis.  The paper parallelizes one conversion across channels; on TPU the
+  VPU's width is better spent across batch elements, with the short channel
+  axis resident in registers/sublanes.
+* Modular reduction is **Barrett-via-f32**: ``q = floor(t * (1/m))`` with a
+  single ±m correction pass.  With 15-bit moduli every intermediate product
+  t < 2**30, the f32 quotient error is < 1/2, so one conditional add and one
+  conditional subtract make the result exact.  This replaces integer
+  division/remainder, which the VPU lowers slowly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["barrett_mod", "mrc_rows", "to_ma_rows"]
+
+
+def barrett_mod(t, m, recip):
+    """Exact t mod m for 0 <= t < 2**30, m < 2**15 (all int32, f32 recip)."""
+    q = jnp.floor(t.astype(jnp.float32) * recip).astype(jnp.int32)
+    r = t - q * m
+    r = jnp.where(r < 0, r + m, r)
+    r = jnp.where(r >= m, r - m, r)
+    return r
+
+
+def mrc_rows(w, inv_t, m, recip, *, n: int):
+    """Alg. 2 on an (n, B) register tile.
+
+    w:      (n, B) residues
+    inv_t:  (n, n) transposed inverse table: inv_t[i, j] = m_j^{-1} mod m_i
+    m:      (n, 1) moduli;  recip: (n, 1) f32 reciprocals
+    Returns (n, B) mixed-radix digits.
+    """
+    idx = jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0)
+
+    def body(j, w):
+        a_j = jax.lax.dynamic_slice_in_dim(w, j, 1, axis=0)        # (1, B)
+        inv_j = jax.lax.dynamic_slice_in_dim(inv_t, j, 1, axis=1)  # (n, 1)
+        d = w - a_j
+        d = jnp.where(d < 0, d + m, d)
+        r = barrett_mod(d * inv_j, m, recip)
+        return jnp.where(idx > j, r, w)
+
+    return jax.lax.fori_loop(0, n - 1, body, w) if n > 1 else w
+
+
+def to_ma_rows(digits, betas, ma: int):
+    """Alg. 3 on an (n, B) digit tile -> (1, B) residues mod m_a.
+
+    betas: (n, 1) partial products mod m_a.  Per-term reduction keeps the
+    row-sum < n * m_a < 2**31.
+    """
+    recip = jnp.float32(1.0 / ma)
+    terms = barrett_mod(digits * betas, jnp.int32(ma), recip)
+    s = jnp.sum(terms, axis=0, keepdims=True)  # (1, B)
+    return barrett_mod(s, jnp.int32(ma), recip)

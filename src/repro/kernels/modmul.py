@@ -1,0 +1,41 @@
+"""Pallas TPU kernel: channel-wise modular multiply (RNS ring product).
+
+The throughput workhorse of every RNS pipeline (the paper's op-count unit
+``M``).  Elementwise over an (n, B) tile; Barrett-via-f32 reduction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import barrett_mod
+
+__all__ = ["modmul_kernel_call"]
+
+
+def _kernel(x_ref, y_ref, m_ref, out_ref):
+    m = m_ref[...]
+    recip = 1.0 / m.astype(jnp.float32)
+    out_ref[...] = barrett_mod(x_ref[...] * y_ref[...], m, recip)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def modmul_kernel_call(x_t, y_t, m_col, *, block_b: int = 1024, interpret: bool = True):
+    """x_t, y_t: (n, B) int32 reduced residues -> (n, B) product residues."""
+    n, B = x_t.shape
+    grid = (B // block_b,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, block_b), lambda b: (0, b)),
+            pl.BlockSpec((n, block_b), lambda b: (0, b)),
+            pl.BlockSpec((n, 1), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, block_b), lambda b: (0, b)),
+        out_shape=jax.ShapeDtypeStruct((n, B), jnp.int32),
+        interpret=interpret,
+    )(x_t, y_t, m_col)

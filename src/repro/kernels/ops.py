@@ -1,0 +1,131 @@
+"""Public wrappers for the RNS Pallas kernels.
+
+These present the same (..., n) channel-minor API as repro.core, and handle:
+  * layout: transpose to the kernel-native (n, B) channel-major tiles,
+  * padding: batch padded to the block size (pad values are benign — every
+    kernel is elementwise/per-column in batch),
+  * dispatch: ``interpret=True`` automatically off-TPU so the same call site
+    runs the Mosaic kernel on TPU and the Python interpreter on CPU,
+  * constraints: kernels require 15-bit (int32-lane) bases; wider bases fall
+    back to the pure-jnp core implementations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.base import RNSBase
+
+from .modmul import modmul_kernel_call
+from .mrc import mrc_kernel_call
+from .rns_compare import compare_kernel_call
+
+__all__ = ["mrc_op", "modmul_op", "compare_op"]
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _flatten_batch(x):
+    """(..., n) -> (B, n), plus a reconstructor."""
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+def _pad_to(x, mult, axis):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+def _tables(base: RNSBase):
+    if base.bits > 15:
+        raise ValueError("Pallas kernels require bits<=15 (int32 lanes); "
+                         "use repro.core for wider bases")
+    inv_t = jnp.asarray(base.inv_tri_np.T, dtype=jnp.int32)        # (i, j)
+    m_col = jnp.asarray(base.moduli_np[:, None], dtype=jnp.int32)  # (n, 1)
+    return inv_t, m_col
+
+
+def mrc_op(base: RNSBase, x, *, block_b: int = 512, interpret: bool | None = None):
+    """Mixed-radix digits of ``x: (..., n)`` via the Pallas kernel."""
+    interpret = _interpret_default() if interpret is None else interpret
+    inv_t, m_col = _tables(base)
+    flat, lead = _flatten_batch(x.astype(jnp.int32))
+    xt, B = _pad_to(flat.T, block_b, axis=1)
+    block_b = min(block_b, xt.shape[1])
+    out = mrc_kernel_call(xt, inv_t, m_col, block_b=block_b, interpret=interpret)
+    return out[:, :B].T.reshape(*lead, base.n).astype(x.dtype)
+
+
+def modmul_op(base: RNSBase, x, y, *, block_b: int = 1024, interpret: bool | None = None):
+    """Channel-wise (x * y) mod m_i via the Pallas kernel."""
+    interpret = _interpret_default() if interpret is None else interpret
+    _, m_col = _tables(base)
+    fx, lead = _flatten_batch(x.astype(jnp.int32))
+    fy, _ = _flatten_batch(y.astype(jnp.int32))
+    xt, B = _pad_to(fx.T, block_b, axis=1)
+    yt, _ = _pad_to(fy.T, block_b, axis=1)
+    block_b = min(block_b, xt.shape[1])
+    out = modmul_kernel_call(xt, yt, m_col, block_b=block_b, interpret=interpret)
+    return out[:, :B].T.reshape(*lead, base.n).astype(x.dtype)
+
+
+def compare_op(
+    base: RNSBase, x1, xa1, x2, xa2, *, block_b: int = 512, interpret: bool | None = None
+):
+    """Fused Algorithm 1: boolean (N1 >= N2) for batched operands.
+
+    x1, x2: (..., n); xa1, xa2: (...,).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    inv_t, m_col = _tables(base)
+    betas_col = jnp.asarray(base.betas_ma_np[:, None], dtype=jnp.int32)
+    f1, lead = _flatten_batch(x1.astype(jnp.int32))
+    f2, _ = _flatten_batch(x2.astype(jnp.int32))
+    a1 = xa1.astype(jnp.int32).reshape(1, -1)
+    a2 = xa2.astype(jnp.int32).reshape(1, -1)
+    x1t, B = _pad_to(f1.T, block_b, axis=1)
+    x2t, _ = _pad_to(f2.T, block_b, axis=1)
+    a1p, _ = _pad_to(a1, block_b, axis=1)
+    a2p, _ = _pad_to(a2, block_b, axis=1)
+    block_b = min(block_b, x1t.shape[1])
+    out = compare_kernel_call(
+        x1t, a1p, x2t, a2p, inv_t, m_col, betas_col,
+        ma=base.ma, block_b=block_b, interpret=interpret,
+    )
+    return out[0, :B].reshape(lead).astype(bool)
+
+
+def codec_decode_op(codec, summed, *, block_b: int = 1024,
+                    interpret: bool | None = None):
+    """Fused gradient-codec decode: summed channels (..., n+1) -> f32 mean
+    gradient contribution (caller divides by world).  See codec_decode.py."""
+    from .codec_decode import codec_decode_kernel_call
+
+    base = codec.base
+    if base.M >= 1 << 45:
+        raise ValueError("codec decode kernel requires M < 2**45 (3 limbs)")
+    interpret = _interpret_default() if interpret is None else interpret
+    inv_t, m_col = _tables(base)
+    T = (base.M + 1) // 2
+    M = base.M
+    half_col = jnp.asarray(
+        [[T & 0x7FFF], [(T >> 15) & 0x7FFF], [T >> 30],
+         [M & 0x7FFF], [(M >> 15) & 0x7FFF], [M >> 30]], dtype=jnp.int32,
+    )
+    flat, lead = _flatten_batch(summed.astype(jnp.int32))
+    xt, B = _pad_to(flat.T, block_b, axis=1)
+    block_b = min(block_b, xt.shape[1])
+    out = codec_decode_kernel_call(
+        xt, inv_t, m_col, half_col, n=base.n,
+        inv_scale=1.0 / (1 << codec.frac_bits),
+        block_b=block_b, interpret=interpret,
+    )
+    return out[0, :B].reshape(lead)

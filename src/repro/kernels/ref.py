@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each oracle is the straight-line definition of the math the kernel must
+reproduce bit-exactly (integer kernels ⇒ exact equality, not allclose).
+They delegate to the core library, which is itself validated against Python
+big-int arithmetic in tests/test_core_rns.py.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import arith
+from repro.core.base import RNSBase
+from repro.core.compare import rns_compare_ge
+from repro.core.convert import to_ma
+from repro.core.mrc import mrc
+
+__all__ = ["ref_modmul", "ref_mrc", "ref_compare", "ref_to_ma"]
+
+
+def ref_modmul(base: RNSBase, x, y):
+    """(..., n) channel-wise modular product."""
+    return arith.mul(base, x, y)
+
+
+def ref_mrc(base: RNSBase, x):
+    """(..., n) residues -> mixed-radix digits (Alg. 2)."""
+    return mrc(base, x)
+
+
+def ref_to_ma(base: RNSBase, digits):
+    """(..., n) digits -> X mod m_a (Alg. 3)."""
+    return to_ma(base, digits)
+
+
+def ref_compare(base: RNSBase, x1, xa1, x2, xa2):
+    """Alg. 1 verdict tensor (bool)."""
+    return rns_compare_ge(base, x1, xa1, x2, xa2)

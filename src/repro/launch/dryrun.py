@@ -1,0 +1,334 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+extract memory / cost / collective analysis for the roofline report.
+
+MUST set XLA_FLAGS before ANY jax import (device count locks on first init):
+the two lines below are therefore the first statements of the module.
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma-7b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+import repro  # noqa: E402,F401  (enables x64)
+from repro.configs import SHAPES, ALIASES, get_config, shape_cells  # noqa: E402
+from repro.dist.act_sharding import use_mesh  # noqa: E402
+from repro.dist.sharding import (  # noqa: E402
+    batch_specs,
+    cache_specs,
+    named_shardings,
+    opt_state_specs,
+    param_specs,
+)
+from repro.launch.hlo_analysis import roofline  # noqa: E402
+from repro.launch.hlo_costs import analyze_module  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import abstract_params  # noqa: E402
+from repro.serve.serve_step import (  # noqa: E402
+    cache_abstract,
+    make_decode_step,
+    make_prefill,
+    prompt_abstract,
+)
+from repro.train.optimizer import AdamWConfig, adamw_init  # noqa: E402
+from repro.train.train_step import make_train_step  # noqa: E402
+
+HBM_PER_CHIP = 16 * 1024**3  # v5e
+
+
+# ----------------------------------------------------------------- helpers
+def count_params(cfg, params_abs):
+    """(total, active) parameter counts; MoE experts scale by top_k/E."""
+    total = active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_abs)[0]:
+        keys = [str(getattr(k, "key", k)) for k in path]
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if "moe" in keys and keys[-1] in ("wi", "wo"):
+            active += n * cfg.top_k / cfg.n_experts
+        else:
+            active += n
+    return total, int(active)
+
+
+def model_flops(cfg, params_abs, kind: str, batch: int, seq: int) -> float:
+    """6·N_active·D (train) or 2·N_active·D (serve), global."""
+    _, active = count_params(cfg, params_abs)
+    tokens = batch * (1 if kind == "decode" else seq)
+    return (6.0 if kind == "train" else 2.0) * active * tokens
+
+
+def train_batch_abstract(cfg, batch: int, seq: int):
+    spec = {"tokens": jax.ShapeDtypeStruct((batch, seq + 1), jnp.int32)}
+    if cfg.family == "vlm":
+        spec["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_patches, cfg.d_model), jnp.float32
+        )
+    if cfg.family == "encdec":
+        spec["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.enc_frames, cfg.d_model), jnp.float32
+        )
+    return spec
+
+
+def input_specs(cfg, shape_name: str, params_abs):
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    cell = SHAPES[shape_name]
+    kind, seq, batch = cell["kind"], cell["seq"], cell["batch"]
+    if kind == "train":
+        return {"batch": train_batch_abstract(cfg, batch, seq)}
+    if kind == "prefill":
+        return {"batch": prompt_abstract(cfg, batch, seq)}
+    cache = cache_abstract(cfg, params_abs, batch, seq)
+    return {
+        "cache": cache,
+        "tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+# ----------------------------------------------------------------- lowering
+def lower_cell(arch: str, shape_name: str, mesh, *, microbatches: int = 1,
+               kv_quant: bool = False):
+    cfg = get_config(arch)
+    cell = SHAPES[shape_name]
+    kind, seq, batch = cell["kind"], cell["seq"], cell["batch"]
+    if (kv_quant and kind != "train" and not cfg.window
+            and cfg.family in ("dense", "vlm", "moe")):
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    # bf16 weights everywhere; training keeps f32 masters INSIDE the
+    # (ZeRO-sharded) optimizer state (mixed-precision production layout).
+    cfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+
+    params_abs = abstract_params(cfg)
+    pspecs = param_specs(params_abs, mesh, n_experts=cfg.n_experts)
+    psh = named_shardings(pspecs, mesh)
+    ins = input_specs(cfg, shape_name, params_abs)
+
+    with mesh, use_mesh(mesh):
+        if kind == "train":
+            opt_abs = jax.eval_shape(
+                lambda p: adamw_init(p, master=True), params_abs
+            )
+            zspec = opt_state_specs(params_abs, pspecs, mesh, zero1=cfg.zero1)
+            ospecs = {"m": zspec, "v": zspec, "master": zspec, "step": P()}
+            osh = named_shardings(ospecs, mesh)
+            bsh = named_shardings(batch_specs(ins["batch"], mesh), mesh)
+            step = make_train_step(
+                cfg, AdamWConfig(), microbatches=microbatches,
+                grad_shardings=None if os.environ.get("RNS_NO_GRAD_PIN") else psh,
+            )
+            msh = named_shardings(
+                {k: P() for k in ("loss", "ce", "aux", "gnorm")}, mesh
+            )
+            jitted = jax.jit(
+                step,
+                in_shardings=(psh, osh, bsh),
+                out_shardings=(psh, osh, msh),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_abs, opt_abs, ins["batch"])
+        elif kind == "prefill":
+            cache_len = seq + (cfg.n_patches if cfg.family == "vlm" else 0)
+            fn = make_prefill(cfg, cache_len)
+            bsh = named_shardings(batch_specs(ins["batch"], mesh), mesh)
+            cache_abs = jax.eval_shape(fn, params_abs, ins["batch"])[1]
+            csh = named_shardings(cache_specs(cache_abs, mesh), mesh)
+            lsh = named_shardings(
+                batch_specs(
+                    jax.ShapeDtypeStruct((batch, cfg.vocab), jnp.float32), mesh
+                ),
+                mesh,
+            )
+            jitted = jax.jit(
+                fn, in_shardings=(psh, bsh), out_shardings=(lsh, csh)
+            )
+            lowered = jitted.lower(params_abs, ins["batch"])
+        else:  # decode
+            fn = make_decode_step(cfg)
+            csh = named_shardings(cache_specs(ins["cache"], mesh), mesh)
+            tsh = named_shardings(batch_specs(ins["tokens"], mesh), mesh)
+            lsh = named_shardings(
+                batch_specs(
+                    jax.ShapeDtypeStruct((batch, cfg.vocab), jnp.float32), mesh
+                ),
+                mesh,
+            )
+            jitted = jax.jit(
+                fn,
+                in_shardings=(psh, csh, tsh, named_shardings(P(), mesh)),
+                out_shardings=(lsh, csh),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(
+                params_abs, ins["cache"], ins["tokens"], ins["pos"]
+            )
+    return cfg, params_abs, lowered, (kind, seq, batch)
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, *, microbatches=1,
+             kv_quant=False):
+    multi = mesh_name == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    ndev = mesh.size
+    t0 = time.time()
+    cfg, params_abs, lowered, (kind, seq, batch) = lower_cell(
+        arch, shape_name, mesh, microbatches=microbatches, kv_quant=kv_quant
+    )
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    print(mem)  # proves it fits (per-device static memory)
+    xla_cost = compiled.cost_analysis()
+    if isinstance(xla_cost, list):
+        xla_cost = xla_cost[0]
+    # Trip-count-aware accounting (XLA's cost_analysis counts scan bodies
+    # once — useless for scanned-layer models; see launch/hlo_costs.py).
+    mc = analyze_module(compiled.as_text())
+    cost = {"flops": mc.flops, "bytes accessed": mc.bytes}
+    print({"flops": mc.flops, "bytes": mc.bytes,
+           "xla_flops_once": xla_cost.get("flops")})
+    coll = mc.collectives
+    for k in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+              "collective-permute", "ops"):
+        coll.setdefault(k, 0.0)
+    terms = roofline(cost, coll)
+    terms["dynamic_loops"] = mc.dynamic_loops
+    terms["while_loops"] = mc.while_loops
+
+    mf = model_flops(cfg, params_abs, kind, batch, seq)
+    per_dev_bytes = (
+        mem.argument_size_in_bytes
+        + mem.output_size_in_bytes
+        + mem.temp_size_in_bytes
+        - mem.alias_size_in_bytes
+    )
+    # The CPU backend promotes every bf16 dot to f32 (no native bf16 GEMM),
+    # so fat temporaries are f32 copies of bf16 tensors — roughly 2x what the
+    # TPU compilation holds.  Report both raw and adjusted (see EXPERIMENTS
+    # §Dry-run methodology).
+    per_dev_adj = (
+        mem.argument_size_in_bytes
+        + mem.output_size_in_bytes
+        + mem.temp_size_in_bytes // 2
+        - mem.alias_size_in_bytes
+    )
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "devices": ndev,
+        "kind": kind,
+        "seq": seq,
+        "global_batch": batch,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "per_device_bytes": per_dev_bytes,
+            "per_device_bytes_tpu_adjusted": per_dev_adj,
+            "fits_hbm_raw_cpu": bool(per_dev_bytes < HBM_PER_CHIP),
+            "fits_hbm": bool(per_dev_adj < HBM_PER_CHIP),
+        },
+        "collectives": coll,
+        "xla_cost_analysis_once": {
+            k: xla_cost.get(k) for k in ("flops", "bytes accessed")
+        },
+        "roofline": terms,
+        "model_flops_global": mf,
+        "model_flops_per_device": mf / ndev,
+        "useful_flops_ratio": (
+            (mf / ndev) / terms["hlo_flops_per_device"]
+            if terms["hlo_flops_per_device"]
+            else 0.0
+        ),
+        "knobs": {"microbatches": microbatches, "remat": cfg.remat,
+                  "zero1": cfg.zero1, "window_cache": cfg.window_cache,
+                  "kv_quant": cfg.kv_quant},
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str)
+    ap.add_argument("--shape", type=str)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", type=str, default="experiments/dryrun")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--kv-quant", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [
+            (a, s) for a in ALIASES for s in shape_cells(get_config(a))
+        ]
+    else:
+        cells = [(args.arch, args.shape)]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch, shape in cells:
+        for mesh_name in meshes:
+            tag = f"{arch}__{shape}__{mesh_name}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[skip] {tag} (exists)")
+                continue
+            print(f"[cell] {tag} ...", flush=True)
+            try:
+                rec = run_cell(
+                    arch, shape, mesh_name, microbatches=args.microbatches,
+                    kv_quant=args.kv_quant,
+                )
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                r = rec["roofline"]
+                print(
+                    f"[ok]   {tag}: compile={rec['compile_s']}s "
+                    f"bottleneck={r['bottleneck']} "
+                    f"compute={r['compute_s']:.4f}s mem={r['memory_s']:.4f}s "
+                    f"coll={r['collective_s']:.4f}s "
+                    f"fits={rec['memory']['fits_hbm']}"
+                    f" (raw={rec['memory']['fits_hbm_raw_cpu']})",
+                    flush=True,
+                )
+            except Exception as e:  # noqa: BLE001
+                failures.append((tag, repr(e)))
+                print(f"[FAIL] {tag}: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" ", t, e)
+        raise SystemExit(1)
+    print("\nALL CELLS OK")
+
+
+if __name__ == "__main__":
+    main()

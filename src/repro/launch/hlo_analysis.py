@@ -1,0 +1,106 @@
+"""Post-SPMD HLO analysis: collective-traffic accounting + roofline terms.
+
+collective_bytes parses the partitioned module text (per-device view) and
+sums effective per-device wire bytes for every collective op:
+
+    all-reduce        2 * size   (ring = reduce-scatter + all-gather)
+    all-gather        output size (data received per device, ~out*(n-1)/n)
+    reduce-scatter    input size
+    all-to-all        size       (each device sends/receives ~size)
+    collective-permute size
+
+Async pairs (-start/-done) are counted once via the -start line.
+
+Roofline terms (seconds, per chip) for TPU v5e:
+    compute    = HLO flops / 197e12 (bf16 peak)
+    memory     = HLO bytes accessed / 819e9
+    collective = per-device collective bytes / 50e9 (ICI per link)
+"""
+from __future__ import annotations
+
+import re
+
+__all__ = ["collective_bytes", "roofline", "HW"]
+
+HW = dict(peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|[suf]\d+|bf16|c64|c128)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?\s*(?:pred|[suf]\d+|bf16|c64|c128)\[.*?"
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+_DONE_RE = re.compile(r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                      r"collective-permute)-done\(")
+
+
+def _shapes_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-device wire bytes by collective kind from partitioned HLO."""
+    out = {
+        "all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+        "all-to-all": 0, "collective-permute": 0, "ops": 0,
+    }
+    for line in hlo_text.splitlines():
+        if _DONE_RE.search(line):
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        eq = line.index("=")
+        par = line.index(m.group(1))
+        out_bytes = _shapes_bytes(line[eq:par])
+        in_bytes = _shapes_bytes(line[par:])
+        if kind == "all-reduce":
+            eff = 2 * out_bytes
+        elif kind == "all-gather":
+            eff = out_bytes
+        elif kind == "reduce-scatter":
+            eff = in_bytes
+        else:
+            eff = max(out_bytes, in_bytes)
+        out[kind] += eff
+        out["ops"] += 1
+    out["total"] = sum(out[k] for k in
+                       ("all-reduce", "all-gather", "reduce-scatter",
+                        "all-to-all", "collective-permute"))
+    return out
+
+
+def roofline(cost: dict, coll: dict) -> dict:
+    """Three roofline terms (seconds) from per-device cost/collective data."""
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cb = float(coll["total"])
+    terms = {
+        "compute_s": flops / HW["peak_flops"],
+        "memory_s": byts / HW["hbm_bw"],
+        "collective_s": cb / HW["ici_bw"],
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": byts,
+        "collective_bytes_per_device": cb,
+    }
+    dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
+    terms["bottleneck"] = dom.replace("_s", "")
+    bound = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    terms["roofline_fraction"] = (
+        terms["compute_s"] / bound if bound > 0 else 0.0
+    )
+    return terms

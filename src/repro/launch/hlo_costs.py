@@ -1,0 +1,273 @@
+"""Trip-count-aware cost analysis of compiled (post-SPMD, post-fusion) HLO.
+
+Why: ``compiled.cost_analysis()`` counts while-loop bodies ONCE, so any
+scan-over-layers model (all of ours) under-reports FLOPs / bytes /
+collectives by ~the layer count.  This module parses the compiled module
+text, builds the computation call graph, extracts while-loop trip counts
+(scan loops compare the induction variable against a constant), and
+aggregates:
+
+  * flops             — dot ops: 2 * |out| * prod(contracting dims)
+  * bytes             — per TOP-LEVEL op: operands + outputs (post-fusion,
+                        fusion boundaries ARE the HBM traffic; fusion
+                        interiors are traversed for flops only)
+  * collective bytes  — per-kind effective wire bytes (see hlo_analysis)
+
+Multipliers: while bodies x trip count, fusion/call bodies x call sites.
+Dynamic-bound loops (no comparable constant) fall back to multiplier 1 and
+are reported in ``dynamic_loops`` so the caveat is visible per cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["analyze_module", "ModuleCosts"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|bf16|f8e4m3fn|f8e5m2|[sufc]\d+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+# First `word(` token after '=' is the opcode: dtypes are followed by '[',
+# layout/comment segments (`{3,2,1,0}`, `/*index=5*/`) contain no `word(`.
+_OPCODE_RE = re.compile(r"\b([\w\-]+)\(")
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+_ATTR_COMP_RE = re.compile(r"(calls|to_apply|body|condition)=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _shape_dims(segment: str):
+    """First shape's dims in a segment."""
+    m = _SHAPE_RE.search(segment)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    out_segment: str        # text between '=' and opcode (result shapes)
+    rest: str               # text from opcode onward (operands + attrs)
+    operands: list
+    comps: dict             # attr -> computation name
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    shapes: dict            # op name -> shape segment (for operand lookup)
+    params: dict            # param name -> shape segment
+
+
+def parse_module(text: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if not stripped or stripped.startswith("//"):
+            continue
+        # computation header:  %name (p: type[...], ...) -> ... {
+        if (stripped.startswith("%") or stripped.startswith("ENTRY")) and stripped.endswith("{"):
+            header = stripped
+            name = header.split()[1] if header.startswith("ENTRY") else header.split()[0]
+            name = name.lstrip("%").split("(")[0].rstrip()
+            if header.startswith("ENTRY"):
+                name = "ENTRY"
+            cur = Computation(name=name, ops=[], shapes={}, params={})
+            # parse params from header
+            inner = header[header.find("(") + 1 : header.rfind("->")]
+            for pm in re.finditer(r"([\w\.\-]+):\s*((?:\([^)]*\))|(?:[\w\[\],]+))", inner):
+                cur.params[pm.group(1)] = pm.group(2)
+                cur.shapes[pm.group(1)] = pm.group(2)
+            comps[name] = cur
+            continue
+        if stripped == "}" or stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(stripped)
+        if not m:
+            continue
+        opname, rhs = m.group(1), m.group(2)
+        om = _OPCODE_RE.search(rhs)
+        if not om:
+            continue
+        out_seg, opcode = rhs[: om.start(1)], om.group(1)
+        rest = rhs[om.end(1):]
+        if opcode == "parameter":
+            cur.shapes[opname] = out_seg
+            continue
+        operands = _OPERANDS_RE.findall(rest.split(")", 1)[0] + ")")
+        attrs = dict()
+        for am in _ATTR_COMP_RE.finditer(rest):
+            attrs[am.group(1)] = am.group(2)
+        cur.shapes[opname] = out_seg
+        cur.ops.append(Op(opname, opcode, out_seg, rest, operands, attrs))
+    return comps
+
+
+def _trip_count(cond: Computation) -> int | None:
+    """Scan-style loops: max integer constant in the condition computation."""
+    consts = []
+    for op in cond.ops:
+        consts += [int(v) for v in _CONST_RE.findall(op.rest)]
+    # also constants folded into compare lines directly
+    return max(consts) if consts else None
+
+
+@dataclasses.dataclass
+class ModuleCosts:
+    flops: float
+    bytes: float
+    collectives: dict
+    dynamic_loops: int
+    while_loops: int
+
+
+def _dot_flops(op: Op, shapes: dict) -> float:
+    out_elems = 1
+    dims = _shape_dims(op.out_segment)
+    if dims is None:
+        return 0.0
+    for d in dims:
+        out_elems *= d
+    # contracting dims from lhs
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    lhs = op.operands[0] if op.operands else None
+    k = 1
+    if cm and lhs and lhs in shapes:
+        lhs_dims = _shape_dims(shapes[lhs])
+        if lhs_dims:
+            for idx in cm.group(1).split(","):
+                if idx:
+                    i = int(idx)
+                    if i < len(lhs_dims):
+                        k *= lhs_dims[i]
+    return 2.0 * out_elems * k
+
+
+def _coll_bytes(op: Op) -> tuple[str, float] | None:
+    for kind in COLLECTIVES:
+        if op.opcode == kind or op.opcode == kind + "-start":
+            out_b = _shape_bytes(op.out_segment)
+            in_b = _shape_bytes(op.rest.split(")", 1)[0])
+            if kind == "all-reduce":
+                eff = 2 * out_b
+            elif kind == "all-gather":
+                eff = out_b
+            elif kind == "reduce-scatter":
+                eff = in_b
+            else:
+                eff = max(out_b, in_b)
+            return kind, eff
+    return None
+
+
+_SKIP_BYTES = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def analyze_module(text: str) -> ModuleCosts:
+    comps = parse_module(text)
+    memo: dict[tuple, tuple] = {}
+    stats = {"dynamic": 0, "whiles": 0}
+
+    def visit(name: str, count_bytes: bool):
+        key = (name, count_bytes)
+        if key in memo:
+            return memo[key]
+        comp = comps.get(name)
+        if comp is None:
+            return 0.0, 0.0, {}
+        fl, by, coll = 0.0, 0.0, {}
+        for op in comp.ops:
+            if op.opcode == "dot":
+                fl += _dot_flops(op, comp.shapes)
+            cb = _coll_bytes(op)
+            if cb:
+                coll[cb[0]] = coll.get(cb[0], 0.0) + cb[1]
+                coll["ops"] = coll.get("ops", 0.0) + 1
+            if count_bytes and op.opcode not in _SKIP_BYTES and not op.opcode.endswith("-done"):
+                out_b = _shape_bytes(op.out_segment)
+                if op.opcode == "dynamic-update-slice":
+                    # in-place update: traffic = update region (read + write)
+                    upd = comp.shapes.get(op.operands[1], "") if len(op.operands) > 1 else ""
+                    by += 2 * _shape_bytes(upd)
+                elif op.opcode == "dynamic-slice":
+                    by += 2 * out_b  # read region + write result
+                else:
+                    in_b = sum(
+                        _shape_bytes(comp.shapes.get(o, "")) for o in op.operands
+                    )
+                    by += out_b + in_b
+            # recurse
+            if op.opcode == "while":
+                stats["whiles"] += 1
+                body = op.comps.get("body")
+                cond = op.comps.get("condition")
+                trip = None
+                ktc = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', op.rest)
+                if ktc:
+                    trip = int(ktc.group(1))
+                elif cond and cond in comps:
+                    trip = _trip_count(comps[cond])
+                if trip is None:
+                    stats["dynamic"] += 1
+                    trip = 1
+                for sub, cb2 in ((body, count_bytes), (cond, False)):
+                    if sub:
+                        f2, b2, c2 = visit(sub, cb2)
+                        fl += trip * f2
+                        by += trip * b2
+                        for k, v in c2.items():
+                            coll[k] = coll.get(k, 0.0) + trip * v
+            elif op.opcode == "fusion":
+                callee = op.comps.get("calls")
+                if callee:
+                    f2, b2, c2 = visit(callee, False)  # flops only inside fusion
+                    fl += f2
+                    for k, v in c2.items():
+                        coll[k] = coll.get(k, 0.0) + v
+            elif op.opcode in ("call", "conditional", "async-start"):
+                for attr in ("to_apply", "calls"):
+                    callee = op.comps.get(attr)
+                    if callee:
+                        f2, b2, c2 = visit(callee, count_bytes)
+                        fl += f2
+                        by += b2
+                        for k, v in c2.items():
+                            coll[k] = coll.get(k, 0.0) + v
+        memo[key] = (fl, by, coll)
+        return memo[key]
+
+    fl, by, coll = visit("ENTRY", True)
+    coll["total"] = sum(v for k, v in coll.items() if k in COLLECTIVES)
+    return ModuleCosts(
+        flops=fl, bytes=by, collectives=coll,
+        dynamic_loops=stats["dynamic"], while_loops=stats["whiles"],
+    )

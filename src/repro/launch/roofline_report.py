@@ -1,0 +1,85 @@
+"""Roofline report generator: dry-run JSONs -> markdown tables.
+
+    PYTHONPATH=src python -m repro.launch.roofline_report \
+        --dryrun experiments/dryrun --out experiments/roofline.md
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import ALIASES, SHAPES, get_config, shape_cells
+
+
+def load_records(dryrun_dir):
+    recs = {}
+    for path in glob.glob(os.path.join(dryrun_dir, "*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_row(r):
+    t = r["roofline"]
+    mem = r["memory"]
+    return (
+        f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+        f"| {t['compute_s']*1e3:.2f} | {t['memory_s']*1e3:.2f} "
+        f"| {t['collective_s']*1e3:.2f} | **{t['bottleneck']}** "
+        f"| {r['model_flops_per_device']/1e12:.2f} "
+        f"| {t['hlo_flops_per_device']/1e12:.2f} "
+        f"| {r['useful_flops_ratio']:.2f} "
+        f"| {mem['per_device_bytes_tpu_adjusted']/2**30:.1f} "
+        f"| {'Y' if mem['fits_hbm'] else 'N'} |"
+    )
+
+
+HEADER = (
+    "| arch | shape | mesh | compute ms | memory ms | collective ms | "
+    "bottleneck | model TF/dev | HLO TF/dev | useful | GiB/dev | fits |\n"
+    "|---|---|---|---|---|---|---|---|---|---|---|---|"
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="experiments/dryrun")
+    ap.add_argument("--out", default="experiments/roofline.md")
+    ap.add_argument("--mesh", default="single",
+                    help="mesh for the main table (single|multi|both)")
+    args = ap.parse_args()
+    recs = load_records(args.dryrun)
+
+    lines = [HEADER]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    skipped = []
+    for arch in ALIASES:
+        cfg = get_config(arch)
+        cells = shape_cells(cfg)
+        for shape in SHAPES:
+            if shape not in cells:
+                skipped.append((arch, shape))
+                continue
+            for mesh in meshes:
+                r = recs.get((arch, shape, mesh))
+                lines.append(
+                    fmt_row(r) if r else
+                    f"| {arch} | {shape} | {mesh} | — | — | — | MISSING "
+                    f"| — | — | — | — | — |"
+                )
+    lines.append("")
+    lines.append("Skipped cells (full-attention archs at 500k decode, "
+                 "DESIGN.md §6):")
+    for arch, shape in skipped:
+        lines.append(f"- {arch} × {shape}: SKIP")
+    out = "\n".join(lines)
+    with open(args.out, "w") as f:
+        f.write(out + "\n")
+    print(out)
+
+
+if __name__ == "__main__":
+    main()

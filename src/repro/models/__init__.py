@@ -1,0 +1,9 @@
+"""Model zoo: configs and family implementations (see DESIGN.md §6)."""
+from .config import ModelConfig  # noqa: F401
+from .model import (  # noqa: F401
+    abstract_params,
+    decode_step,
+    init_params,
+    prefill,
+    train_logits,
+)

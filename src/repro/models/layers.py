@@ -1,0 +1,93 @@
+"""Shared neural-net layers: RMSNorm, RoPE, gated MLPs, embeddings.
+
+Pure functions over parameter pytrees; all dtype-explicit (x64 is enabled
+globally for the RNS core, so float dtypes must never be inferred).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.act_sharding import constrain
+
+__all__ = [
+    "rms_norm",
+    "rope",
+    "gated_mlp",
+    "init_linear",
+    "init_norm",
+    "init_mlp",
+    "embed",
+    "unembed",
+]
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    """Mean-square reduction in f32; the normalize/scale multiplies stay in
+    the input dtype so no full-width f32 copy of the hidden materializes
+    (matters for compile-time memory accounting on long sequences)."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return x * inv.astype(dt) * (1.0 + scale.astype(dt))
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary embedding.  x: (..., s, h, hd), positions: (..., s)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -jnp.log(jnp.float32(theta)) * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., s, half)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+
+
+def gated_mlp(x, wi, wo, act: str):
+    """SwiGLU / GeGLU: wi: (d, 2, ff), wo: (ff, d).  x: (b, s, d)."""
+    dt = x.dtype
+    h = jnp.einsum("...d,dgf->...gf", x, wi.astype(dt))
+    h = constrain(h, "batch", None, None, "ff")
+    gate, up = h[..., 0, :], h[..., 1, :]
+    g = jax.nn.gelu(gate) if act == "geglu" else jax.nn.silu(gate)
+    out = jnp.einsum("...f,fd->...d", g * up, wo.astype(dt))
+    return constrain(out, "batch", None, None)
+
+
+# ----------------------------------------------------------------- init
+def init_linear(key, shape, dtype, scale=0.02):
+    return (scale * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
+
+
+def init_norm(shape, dtype):
+    return jnp.zeros(shape, dtype=dtype)
+
+
+def init_mlp(key, d, ff, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": init_linear(k1, (d, 2, ff), dtype),
+        "wo": init_linear(k2, (ff, d), dtype),
+    }
+
+
+def embed(tokens, table, dtype):
+    """Token embedding with sqrt(d) scaling (gemma convention)."""
+    d = table.shape[-1]
+    x = table.astype(dtype)[tokens] * jnp.asarray(d, dtype) ** 0.5
+    return constrain(x, "batch", None, None)
+
+
+def unembed(x, table):
+    """Logits against the (tied) embedding table: (..., d) x (V, d) -> (..., V).
+
+    Logits stay VOCAB-SHARDED (the loss computes on sharded logits; the full
+    (b, s, V) tensor never materializes replicated)."""
+    logits = jnp.einsum("...d,vd->...v", x, table.astype(x.dtype))
+    names = ["batch"] + [None] * (logits.ndim - 2) + ["vocab"]
+    return constrain(logits, *names)

@@ -1,0 +1,72 @@
+"""Model dispatcher: one API over all six families.
+
+    init_params(cfg, key)                        -> param pytree
+    train_logits(cfg, params, batch)             -> (logits, aux_loss)
+    prefill(cfg, params, batch, cache_len)       -> (last_logits, cache)
+    decode_step(cfg, params, cache, tokens, pos) -> (logits, cache)
+
+Every function is jit/lower-compatible (init works under jax.eval_shape for
+the allocation-free dry-run).
+"""
+from __future__ import annotations
+
+import jax
+
+from .config import ModelConfig
+from . import ssm_models, transformer
+
+__all__ = ["init_params", "train_logits", "prefill", "decode_step", "abstract_params"]
+
+_DENSE = ("dense", "moe", "vlm")
+
+
+def init_params(cfg: ModelConfig, key):
+    cfg.validate()
+    if cfg.family in _DENSE:
+        return transformer.init_decoder_only(key, cfg)
+    if cfg.family == "encdec":
+        return transformer.init_encdec(key, cfg)
+    if cfg.family in ("ssm", "hybrid"):
+        return ssm_models.init_ssm_stack(key, cfg)
+    raise ValueError(cfg.family)
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree of the parameters — no allocation."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+def train_logits(cfg: ModelConfig, params, batch):
+    if cfg.family in _DENSE:
+        return transformer.decoder_only_logits(cfg, params, batch)
+    if cfg.family == "encdec":
+        return transformer.encdec_logits(cfg, params, batch)
+    if cfg.family == "ssm":
+        return ssm_models.ssm_logits(cfg, params, batch)
+    if cfg.family == "hybrid":
+        return ssm_models.hybrid_logits(cfg, params, batch)
+    raise ValueError(cfg.family)
+
+
+def prefill(cfg: ModelConfig, params, batch, cache_len: int):
+    if cfg.family in _DENSE:
+        return transformer.decoder_only_prefill(cfg, params, batch, cache_len)
+    if cfg.family == "encdec":
+        return transformer.encdec_prefill(cfg, params, batch, cache_len)
+    if cfg.family == "ssm":
+        return ssm_models.ssm_prefill(cfg, params, batch, cache_len)
+    if cfg.family == "hybrid":
+        return ssm_models.hybrid_prefill(cfg, params, batch, cache_len)
+    raise ValueError(cfg.family)
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    if cfg.family in _DENSE:
+        return transformer.decoder_only_decode(cfg, params, cache, tokens, pos)
+    if cfg.family == "encdec":
+        return transformer.encdec_decode(cfg, params, cache, tokens, pos)
+    if cfg.family == "ssm":
+        return ssm_models.ssm_decode(cfg, params, cache, tokens, pos)
+    if cfg.family == "hybrid":
+        return ssm_models.hybrid_decode(cfg, params, cache, tokens, pos)
+    raise ValueError(cfg.family)

@@ -1,0 +1,111 @@
+"""Mixture-of-Experts FFN with top-k routing, capacity, and EP sharding.
+
+Dispatch is PER-ROW (each batch row routes its own tokens): the
+(token, expert) assignments are argsorted WITHIN a row, ranked, dropped
+beyond the per-row capacity, and scattered into per-row expert buffers
+(b, E, C, d).  Because rows never mix, the whole dispatch is local to the
+data shard that owns the row — no cross-device sort networks.  The only
+collectives left are the genuine expert-parallel ones at the einsum
+boundary: buf is batch-sharded, expert weights are experts- (moonshot,
+E%16==0) or expert-ff- (qwen, 60e) sharded over 'model', and XLA
+materializes the all-to-all / psum pair exactly there.
+
+(§Perf note: the first implementation sorted GLOBALLY across the sharded
+token axis — measured 717 s of collective time per step on
+moonshot-v1-16b-a3b train_4k, 99% of the step.  Per-row dispatch removes
+it; see EXPERIMENTS.md.)
+
+Shared experts (qwen2-moe: 4, moonlight: 2) run densely over all tokens.
+Aux load-balance loss (Switch-style) is returned for the trainer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.act_sharding import constrain
+
+from .layers import init_linear
+
+__all__ = ["init_moe", "moe_forward"]
+
+
+def init_moe(key, cfg, dtype):
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.expert_dff
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": init_linear(ks[0], (d, E), jnp.float32),
+        "wi": init_linear(ks[1], (E, d, 2, f), dtype),
+        "wo": init_linear(ks[2], (E, f, d), dtype),
+    }
+    if cfg.n_shared:
+        p["shared_wi"] = init_linear(ks[3], (d, 2, cfg.n_shared * f), dtype)
+        p["shared_wo"] = init_linear(ks[0], (cfg.n_shared * f, d), dtype)
+    return p
+
+
+def _dispatch_row(x_row, idx_row, gates_row, E, C, K):
+    """One row: x (s, d), idx (s, K), gates (s, K) -> buf (E, C, d),
+    plus (dest, tok, weight) for the return scatter."""
+    s, d = x_row.shape
+    eflat = idx_row.reshape(-1)  # (s*K,)
+    order = jnp.argsort(eflat, stable=True)
+    sorted_e = eflat[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    rank = jnp.arange(s * K) - seg_start[sorted_e]
+    keep = rank < C
+    tok = order // K
+    dest = jnp.where(keep, sorted_e * C + rank, E * C)  # overflow -> dump row
+    buf = jnp.zeros((E * C + 1, d), x_row.dtype).at[dest].set(x_row[tok])
+    w = (gates_row.reshape(-1)[order] * keep).astype(x_row.dtype)
+    return buf[: E * C].reshape(E, C, d), dest, tok, w
+
+
+def moe_forward(p, cfg, x):
+    """x: (b, s, d) -> (y: (b, s, d), aux_loss: scalar f32)."""
+    dt = x.dtype
+    b, s, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = max(1, int(s * K / E * cfg.capacity_factor))  # per-row capacity
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)  # (b, s, E)
+    gate_vals, idx = jax.lax.top_k(probs, K)  # (b, s, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Switch-style aux loss (global): E * sum_e fraction_e * mean_prob_e
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # (b, s, K, E)
+    frac = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))
+    aux = E * jnp.sum(frac / K * jnp.mean(probs, axis=(0, 1)))
+
+    buf, dest, tok, w = jax.vmap(
+        lambda xr, ir, gr: _dispatch_row(xr, ir, gr, E, C, K)
+    )(x, idx, gate_vals)
+    # buf: (b, E, C, d) batch-sharded; expert weights model-sharded -> the
+    # contraction boundary below is where EP collectives materialize.
+    buf = constrain(buf, "batch", "experts", None, None)
+
+    h = jnp.einsum("becd,edgf->becgf", buf, p["wi"].astype(dt))
+    h = constrain(h, "batch", "experts", None, None, "ff")
+    act = jax.nn.gelu if cfg.act == "geglu" else jax.nn.silu
+    h = act(h[..., 0, :]) * h[..., 1, :]
+    out_buf = jnp.einsum("becf,efd->becd", h, p["wo"].astype(dt))
+    out_buf = constrain(out_buf, "batch", "experts", None, None)
+    out_flat = out_buf.reshape(b, E * C, d)
+
+    def gather_row(ob_row, dest_row, tok_row, w_row):
+        padded = jnp.concatenate(
+            [ob_row, jnp.zeros((1, d), dt)], axis=0
+        )[dest_row]  # (s*K, d)
+        y = jnp.zeros((s, d), dt).at[tok_row].add(padded * w_row[:, None])
+        return y
+
+    y = jax.vmap(gather_row)(out_flat, dest, tok, w)
+
+    if cfg.n_shared:
+        hs = jnp.einsum("bsd,dgf->bsgf", x, p["shared_wi"].astype(dt))
+        hs = constrain(hs, "batch", None, None, "ff")
+        hs = act(hs[..., 0, :]) * hs[..., 1, :]
+        y = y + jnp.einsum("bsf,fd->bsd", hs, p["shared_wo"].astype(dt))
+
+    return constrain(y, "batch", None, None), aux

@@ -1,0 +1,204 @@
+"""SSM (mamba2) and hybrid (zamba2) stacks: init / forward / prefill / decode.
+
+The hybrid follows Zamba2's shape: groups of ``attn_every`` Mamba2 layers
+punctuated by ONE weight-shared attention+MLP block (simplification of the
+2-block rotation, see DESIGN.md §7); leftover layers form an attention-free
+tail.  Nested scans keep the HLO depth-independent; the shared block's
+weights are closed over (identical on every invocation) while each
+invocation owns a distinct KV cache slot.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.act_sharding import constrain
+
+from .attention import attn_decode, attn_forward, init_attn
+from .config import ModelConfig
+from .layers import embed, gated_mlp, init_mlp, init_linear, init_norm, rms_norm, unembed
+from .ssm import init_mamba2, init_ssm_state, mamba2_decode, mamba2_forward
+from .transformer import _dtype, _maybe_remat, _pdtype, _attn_kwargs
+
+
+def _hybrid_split(cfg: ModelConfig):
+    g = cfg.attn_every
+    groups = cfg.n_layers // g
+    tail = cfg.n_layers - groups * g
+    return groups, g, tail
+
+
+def init_ssm_stack(key, cfg: ModelConfig):
+    dt = _pdtype(cfg)
+    kE, kL, kS = jax.random.split(key, 3)
+
+    def blk(k):
+        return {
+            "ln": init_norm((cfg.d_model,), dt),
+            "mamba": init_mamba2(k, cfg, dt),
+        }
+
+    p = {
+        "embed": init_linear(kE, (cfg.vocab, cfg.d_model), dt, scale=0.02),
+        "final_norm": init_norm((cfg.d_model,), dt),
+    }
+    if cfg.family == "ssm":
+        p["layers"] = jax.vmap(blk)(jax.random.split(kL, cfg.n_layers))
+        return p
+
+    groups, g, tail = _hybrid_split(cfg)
+    keys = jax.random.split(kL, (groups, g))
+    p["groups"] = jax.vmap(jax.vmap(blk))(keys)
+    if tail:
+        p["tail"] = jax.vmap(blk)(jax.random.split(kS, tail))
+    ks1, ks2 = jax.random.split(jax.random.fold_in(key, 7))
+    p["shared"] = {
+        "ln1": init_norm((cfg.d_model,), dt),
+        "attn": init_attn(ks1, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim, dt),
+        "ln2": init_norm((cfg.d_model,), dt),
+        "mlp": init_mlp(ks2, cfg.d_model, cfg.d_ff, dt),
+    }
+    return p
+
+
+# ----------------------------------------------------------------- forward
+def _mamba_body(cfg, collect_state: bool):
+    def body(x, pl):
+        h = rms_norm(x, pl["ln"], cfg.norm_eps)
+        o, st = mamba2_forward(pl["mamba"], cfg, h)
+        return x + o, (st if collect_state else None)
+
+    return body
+
+
+def ssm_logits(cfg: ModelConfig, params, batch):
+    dt = _dtype(cfg)
+    x = embed(batch["tokens"], params["embed"], dt)
+    body = _maybe_remat(_mamba_body(cfg, False), cfg)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(x, params["embed"]), jnp.float32(0.0)
+
+
+def ssm_prefill(cfg: ModelConfig, params, batch, cache_len: int):
+    dt = _dtype(cfg)
+    x = embed(batch["tokens"], params["embed"], dt)
+    body = _maybe_remat(_mamba_body(cfg, True), cfg)
+    x, states = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(x[:, -1:], params["embed"])[:, 0]
+    return logits, {"ssm": states, "len": jnp.int32(batch["tokens"].shape[1])}
+
+
+def ssm_decode(cfg: ModelConfig, params, cache, tokens, pos):
+    dt = _dtype(cfg)
+    x = embed(tokens, params["embed"], dt)
+
+    def body(x, xs):
+        pl, st = xs
+        h = rms_norm(x, pl["ln"], cfg.norm_eps)
+        o, st2 = mamba2_decode(pl["mamba"], cfg, h, st)
+        return x + o, st2
+
+    x, states = jax.lax.scan(body, x, (params["layers"], cache["ssm"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(x[:, 0], params["embed"]), {"ssm": states, "len": cache["len"] + 1}
+
+
+# ------------------------------------------------------------------ hybrid
+def _shared_attn_fwd(cfg, shared, x, positions, *, collect_kv=False):
+    akw = _attn_kwargs(cfg)
+    h = rms_norm(x, shared["ln1"], cfg.norm_eps)
+    res = attn_forward(
+        shared["attn"], h, positions, return_kv=collect_kv,
+        impl="scan" if collect_kv else cfg.attn_impl, **akw,
+    )
+    o, kv = res if collect_kv else (res, None)
+    if collect_kv:
+        kv = jax.lax.optimization_barrier(kv)
+        kv = tuple(constrain(t, "batch", "?seq", "kv", None) for t in kv)
+    x = x + o
+    h2 = rms_norm(x, shared["ln2"], cfg.norm_eps)
+    x = x + gated_mlp(h2, shared["mlp"]["wi"], shared["mlp"]["wo"], cfg.act)
+    return x, kv
+
+
+def hybrid_logits(cfg: ModelConfig, params, batch):
+    dt = _dtype(cfg)
+    x = embed(batch["tokens"], params["embed"], dt)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    inner = _mamba_body(cfg, False)
+
+    def group_body(x, gp):
+        x, _ = jax.lax.scan(inner, x, gp)
+        x, _ = _shared_attn_fwd(cfg, params["shared"], x, positions)
+        return x, None
+
+    x, _ = jax.lax.scan(_maybe_remat(group_body, cfg), x, params["groups"])
+    if "tail" in params:
+        x, _ = jax.lax.scan(_maybe_remat(inner, cfg), x, params["tail"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(x, params["embed"]), jnp.float32(0.0)
+
+
+def hybrid_prefill(cfg: ModelConfig, params, batch, cache_len: int):
+    dt = _dtype(cfg)
+    x = embed(batch["tokens"], params["embed"], dt)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    inner = _mamba_body(cfg, True)
+
+    def group_body(x, gp):
+        x, sts = jax.lax.scan(inner, x, gp)
+        x, kv = _shared_attn_fwd(cfg, params["shared"], x, positions, collect_kv=True)
+        return x, (sts, kv)
+
+    x, (gstates, kvs) = jax.lax.scan(group_body, x, params["groups"])
+    cache = {"groups": gstates, "len": jnp.int32(s)}
+    k_new, v_new = kvs  # (G, b, s, g, hd)
+    pad = cache_len - s
+    cache["k"] = jnp.pad(k_new, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache["v"] = jnp.pad(v_new, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    if "tail" in params:
+        x, tstates = jax.lax.scan(inner, x, params["tail"])
+        cache["tail"] = tstates
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(x[:, -1:], params["embed"])[:, 0]
+    return logits, cache
+
+
+def hybrid_decode(cfg: ModelConfig, params, cache, tokens, pos):
+    dt = _dtype(cfg)
+    x = embed(tokens, params["embed"], dt)
+    akw = _attn_kwargs(cfg)
+
+    def inner(x, xs):
+        pl, st = xs
+        h = rms_norm(x, pl["ln"], cfg.norm_eps)
+        o, st2 = mamba2_decode(pl["mamba"], cfg, h, st)
+        return x + o, st2
+
+    def group_body(x, xs):
+        gp, gst, kc, vc = xs
+        x, sts = jax.lax.scan(inner, x, (gp, gst))
+        h = rms_norm(x, params["shared"]["ln1"], cfg.norm_eps)
+        o, nc = attn_decode(
+            params["shared"]["attn"], h, {"k": kc, "v": vc}, pos, **akw
+        )
+        x = x + o
+        h2 = rms_norm(x, params["shared"]["ln2"], cfg.norm_eps)
+        x = x + gated_mlp(
+            h2, params["shared"]["mlp"]["wi"], params["shared"]["mlp"]["wo"], cfg.act
+        )
+        return x, (sts, nc["k"], nc["v"])
+
+    x, (gstates, kc, vc) = jax.lax.scan(
+        group_body, x, (params["groups"], cache["groups"], cache["k"], cache["v"])
+    )
+    out_cache = {"groups": gstates, "k": kc, "v": vc, "len": cache["len"] + 1}
+    if "tail" in params:
+        x, tstates = jax.lax.scan(inner, x, (params["tail"], cache["tail"]))
+        out_cache["tail"] = tstates
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(x[:, 0], params["embed"]), out_cache

@@ -1,0 +1,2 @@
+"""Serving substrate: prefill / decode with sharded caches."""
+from .serve_step import make_prefill, make_decode_step, cache_abstract  # noqa: F401

@@ -1,0 +1,61 @@
+"""Serving steps: prefill (prompt -> cache) and decode (one token, batched).
+
+Wraps the family decode paths with a stable (params, cache, tokens, pos)
+signature; `cache_abstract` derives the exact cache pytree of
+ShapeDtypeStructs via eval_shape of the prefill — the dry-run lowers
+decode_step against it without allocating a byte.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, prefill
+
+__all__ = ["make_prefill", "make_decode_step", "cache_abstract", "prompt_abstract"]
+
+
+def make_prefill(cfg, cache_len: int):
+    def fn(params, batch):
+        return prefill(cfg, params, batch, cache_len)
+
+    return fn
+
+
+def make_decode_step(cfg):
+    def fn(params, cache, tokens, pos):
+        return decode_step(cfg, params, cache, tokens, pos)
+
+    return fn
+
+
+def prompt_abstract(cfg, batch: int, seq: int):
+    """ShapeDtypeStructs of a prompt batch at (batch, seq)."""
+    spec = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if cfg.family == "vlm":
+        spec["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_patches, cfg.d_model), jnp.float32
+        )
+    if cfg.family == "encdec":
+        spec["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.enc_frames, cfg.d_model), jnp.float32
+        )
+    return spec
+
+
+def cache_abstract(cfg, params_abs, batch: int, cache_len: int):
+    """Abstract cache pytree for a decode step with capacity `cache_len`.
+
+    Derived via eval_shape of prefill over a full-capacity prompt, so it is
+    structurally identical to what serving would hold.  The prompt length
+    equals capacity (minus the vlm patch prefix), i.e. the decode_32k /
+    long_500k cells' "cache of seq_len" semantics.
+    """
+    prompt_len = cache_len - (cfg.n_patches if cfg.family == "vlm" else 0)
+    prompt = prompt_abstract(cfg, batch, prompt_len)
+    _, cache = jax.eval_shape(
+        lambda p, b: prefill(cfg, p, b, cache_len), params_abs, prompt
+    )
+    return cache

@@ -1,0 +1,5 @@
+"""Training substrate: optimizer, data, checkpointing, train step."""
+from .optimizer import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from .train_step import make_loss_fn, make_train_step  # noqa: F401
+from .data import SyntheticLM, Prefetcher  # noqa: F401
+from . import checkpoint  # noqa: F401

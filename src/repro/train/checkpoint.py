@@ -1,0 +1,119 @@
+"""Checkpointing: atomic, async-capable, fingerprint-verified, elastic.
+
+Layout:   <dir>/step_<N>/{0.npy, 1.npy, ..., manifest.json}
+Atomicity: written into step_<N>.tmp then os.rename'd — a crash mid-save
+leaves no manifest at the final path, so restore skips it.
+Elasticity: restore() takes the CURRENT mesh's shardings and device_puts
+each host array accordingly — a checkpoint written under a different mesh
+(or device count) reshards transparently; tests cover 1-device <-> 8-device
+round-trips.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+from repro.dist.fault import tree_fingerprints, verify_fingerprints, find_restorable
+
+__all__ = ["save", "save_async", "restore", "latest_step", "find_restorable"]
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(getattr(k, "key", k)) for k in path) for path, _ in leaves]
+    return names, [leaf for _, leaf in leaves], treedef
+
+
+def save(ckpt_dir: str, step: int, tree, *, extra: dict | None = None) -> str:
+    """Synchronous atomic save of a pytree of (host or device) arrays."""
+    names, leaves, _ = _flatten(tree)
+    host = [np.asarray(l) for l in leaves]
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    for i, arr in enumerate(host):
+        np.save(os.path.join(tmp, f"{i}.npy"), arr)
+    manifest = {
+        "step": step,
+        "names": names,
+        "fingerprints": [
+            fp for fp in tree_fingerprints(dict(zip(names, host))).values()
+        ],
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def save_async(ckpt_dir: str, step: int, tree, *, extra=None) -> threading.Thread:
+    """Fire-and-join-later save: leaves are fetched to host synchronously
+    (cheap relative to the write) and the file I/O runs on a thread so the
+    train loop's next step overlaps the disk write."""
+    names, leaves, _ = _flatten(tree)
+    host = [np.asarray(l) for l in leaves]  # device->host before returning
+    host_tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(tree), host
+    )
+    t = threading.Thread(
+        target=save, args=(ckpt_dir, step, host_tree), kwargs={"extra": extra}
+    )
+    t.start()
+    return t
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    path = find_restorable(ckpt_dir)
+    return int(os.path.basename(path).split("_")[1]) if path else None
+
+
+def restore(ckpt_dir: str, abstract_tree, shardings=None, *, step: int | None = None):
+    """Load + verify + (re)shard a checkpoint onto the current mesh.
+
+    abstract_tree: pytree of ShapeDtypeStructs (or arrays) giving structure.
+    shardings: matching pytree of NamedShardings (None = host arrays).
+    """
+    path = (
+        os.path.join(ckpt_dir, f"step_{step}")
+        if step is not None
+        else find_restorable(ckpt_dir)
+    )
+    if path is None or not os.path.exists(os.path.join(path, "manifest.json")):
+        raise FileNotFoundError(f"no restorable checkpoint under {ckpt_dir}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat = {
+        k: np.load(os.path.join(path, f"{i}.npy"))
+        for i, k in enumerate(manifest["names"])
+    }
+    bad = verify_fingerprints(
+        flat, dict(zip(manifest["names"], manifest["fingerprints"]))
+    )
+    if bad:
+        raise IOError(f"checkpoint {path} corrupt: {bad}")
+    names, leaves, treedef = _flatten(abstract_tree)
+    if names != manifest["names"]:
+        raise ValueError(
+            "checkpoint tree mismatch: "
+            f"{set(names) ^ set(manifest['names'])}"
+        )
+    arrays = [flat[k] for k in names]
+    if shardings is not None:
+        sh_leaves = jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "spec")
+        )
+        arrays = [jax.device_put(a, s) for a, s in zip(arrays, sh_leaves)]
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(abstract_tree), arrays
+    )
+    return tree, manifest["step"], manifest.get("extra", {})

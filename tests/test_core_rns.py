@@ -1,0 +1,350 @@
+"""Core RNS library tests: exactness against Python big-int oracles.
+
+Covers the paper's Theorem 1 (full-range comparison), Remark 1 (the
+N1 ≡ N2 mod m_a special cases), the MRC (Alg. 2), to_ma (Alg. 3), the three
+base-extension methods, signed embedding, division/scaling, and Montgomery
+modular multiplication.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (
+    RNSBase,
+    make_base,
+    add,
+    sub,
+    mul,
+    mrc,
+    mrc_unrolled,
+    mrs_ge,
+    mrs_to_int,
+    to_ma,
+    int_to_rns,
+    rns_to_int,
+    tensor_to_rns,
+    rns_to_tensor,
+    rns_compare_ge,
+    classic_compare_ge,
+    approx_crt_ge,
+    extend_mrc,
+    extend_shenoy,
+    extend_kawamura,
+    encode_signed,
+    is_negative,
+    abs_ge_threshold,
+    pack,
+    divmod_rns,
+    halve,
+    scale_pow2,
+    parity,
+    RNSMontgomery,
+)
+
+BASE8 = make_base(4, bits=8)      # small: exhaustive-ish hypothesis ranges
+BASE15 = make_base(6, bits=15)    # default TPU profile
+BASE31 = make_base(4, bits=31)    # int64-lane profile
+
+
+def _pair(base, N1, N2):
+    x1 = jnp.asarray(base.residues_of(N1))
+    x2 = jnp.asarray(base.residues_of(N2))
+    a1 = jnp.asarray(N1 % base.ma)
+    a2 = jnp.asarray(N2 % base.ma)
+    return x1, a1, x2, a2
+
+
+# ---------------------------------------------------------------- base
+def test_base_tables():
+    b = BASE8
+    assert b.M == np.prod([int(m) for m in b.moduli], dtype=object)
+    for j in range(b.n):
+        for i in range(j + 1, b.n):
+            assert b.inv_tri_np[j, i] * b.moduli[j] % b.moduli[i] == 1
+    acc = 1
+    for i in range(b.n):
+        assert int(b.betas_ma_np[i]) == acc % b.ma
+        acc *= b.moduli[i]
+
+
+def test_base_rejects_non_coprime():
+    with pytest.raises(ValueError):
+        RNSBase(moduli=(6, 9), ma=5, bits=8)
+    with pytest.raises(ValueError):
+        RNSBase(moduli=(7, 11), ma=7, bits=8)
+
+
+# ---------------------------------------------------------------- arith
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_arith_homomorphism(data):
+    b = BASE15
+    X = data.draw(st.integers(0, b.M - 1))
+    Y = data.draw(st.integers(0, b.M - 1))
+    x, y = jnp.asarray(b.residues_of(X)), jnp.asarray(b.residues_of(Y))
+    assert rns_to_int(b, np.asarray(add(b, x, y))) == (X + Y) % b.M
+    assert rns_to_int(b, np.asarray(sub(b, x, y))) == (X - Y) % b.M
+    assert rns_to_int(b, np.asarray(mul(b, x, y))) == (X * Y) % b.M
+
+
+# ---------------------------------------------------------------- MRC
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_mrc_reconstructs(data):
+    for b in (BASE8, BASE15, BASE31):
+        X = data.draw(st.integers(0, b.M - 1))
+        d = mrc(b, jnp.asarray(b.residues_of(X)))
+        assert mrs_to_int(b, np.asarray(d)) == X
+        d2 = mrc_unrolled(b, jnp.asarray(b.residues_of(X)))
+        np.testing.assert_array_equal(np.asarray(d), np.asarray(d2))
+
+
+def test_mrc_batched():
+    b = BASE15
+    xs = np.stack([b.residues_of(i * 7919) for i in range(32)])
+    ds = np.asarray(mrc(b, jnp.asarray(xs)))
+    for i in range(32):
+        assert mrs_to_int(b, ds[i]) == (i * 7919) % b.M
+
+
+# ---------------------------------------------------------------- to_ma
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_to_ma(data):
+    b = BASE15
+    X = data.draw(st.integers(0, b.M - 1))
+    d = mrc(b, jnp.asarray(b.residues_of(X)))
+    assert int(to_ma(b, d)) == X % b.ma
+
+
+# ------------------------------------------------------- comparison (Thm 1)
+@settings(max_examples=200, deadline=None)
+@given(st.data())
+def test_theorem1_full_range(data):
+    b = data.draw(st.sampled_from((BASE8, BASE15, BASE31)))
+    N1 = data.draw(st.integers(0, b.M - 1))
+    N2 = data.draw(st.integers(0, b.M - 1))
+    got = bool(rns_compare_ge(b, *_pair(b, N1, N2)))
+    assert got == (N1 >= N2)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.data())
+def test_remark1_congruent_mod_ma(data):
+    """The special case N1 ≡ N2 (mod m_a) of Remark 1."""
+    b = BASE8
+    N2 = data.draw(st.integers(0, b.M - 1))
+    k = data.draw(st.integers(0, (b.M - 1 - N2) // b.ma))
+    N1 = N2 + k * b.ma
+    assert bool(rns_compare_ge(b, *_pair(b, N1, N2)))
+    if N1 != N2:
+        assert not bool(rns_compare_ge(b, *_pair(b, N2, N1)))
+
+
+def test_compare_edges():
+    for b in (BASE8, BASE15):
+        M = b.M
+        cases = [(0, 0), (0, M - 1), (M - 1, 0), (M - 1, M - 1), (1, 0), (0, 1),
+                 (M // 2, M // 2 + 1), (M // 2 + 1, M // 2)]
+        for N1, N2 in cases:
+            assert bool(rns_compare_ge(b, *_pair(b, N1, N2))) == (N1 >= N2), (N1, N2)
+
+
+def test_compare_batched_vectorized():
+    b = BASE15
+    rng = np.random.default_rng(0)
+    N1 = [int(rng.integers(0, min(b.M, 2**63))) for _ in range(64)]
+    N2 = [int(rng.integers(0, min(b.M, 2**63))) for _ in range(64)]
+    x1 = jnp.asarray(np.stack([b.residues_of(v) for v in N1]))
+    x2 = jnp.asarray(np.stack([b.residues_of(v) for v in N2]))
+    a1 = jnp.asarray(np.asarray([v % b.ma for v in N1], dtype=b.dtype))
+    a2 = jnp.asarray(np.asarray([v % b.ma for v in N2], dtype=b.dtype))
+    got = np.asarray(rns_compare_ge(b, x1, a1, x2, a2))
+    np.testing.assert_array_equal(got, np.asarray(N1) >= np.asarray(N2))
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.data())
+def test_classic_compare_matches(data):
+    b = BASE8
+    N1 = data.draw(st.integers(0, b.M - 1))
+    N2 = data.draw(st.integers(0, b.M - 1))
+    x1 = jnp.asarray(b.residues_of(N1))
+    x2 = jnp.asarray(b.residues_of(N2))
+    assert bool(classic_compare_ge(b, x1, x2)) == (N1 >= N2)
+
+
+def test_approx_crt_fails_close_succeeds_far():
+    """Documents the approximate method's failure band (paper §1)."""
+    b = BASE15
+    far_ok = 0
+    for N1 in [b.M // 3, b.M // 2, 2 * b.M // 3]:
+        N2 = N1 - b.M // 100
+        x1, x2 = jnp.asarray(b.residues_of(N1)), jnp.asarray(b.residues_of(N2))
+        far_ok += bool(approx_crt_ge(b, x1, x2))
+    assert far_ok == 3
+    # Adjacent values: exact method always right; approx method has no such
+    # guarantee (no assertion that it fails — only that OURS succeeds).
+    N1 = b.M // 2
+    N2 = N1 + 1
+    assert not bool(rns_compare_ge(b, *_pair(b, N1, N2)))
+
+
+# ---------------------------------------------------------------- extension
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_extend_mrc_exact(data):
+    b = BASE8
+    X = data.draw(st.integers(0, b.M - 1))
+    targets = (251, 241, 239)
+    got = np.asarray(extend_mrc(b, jnp.asarray(b.residues_of(X)), targets))
+    np.testing.assert_array_equal(got, [X % t for t in targets])
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_extend_shenoy_exact(data):
+    b = BASE8
+    X = data.draw(st.integers(0, b.M - 1))
+    mr = b.ma
+    targets = (251, 241)
+    got = np.asarray(
+        extend_shenoy(
+            b, jnp.asarray(b.residues_of(X)), jnp.asarray(X % mr), mr, targets
+        )
+    )
+    np.testing.assert_array_equal(got, [X % t for t in targets])
+
+
+def test_extend_kawamura_interior_exact_and_edge_band():
+    b = BASE15
+    targets = (32717,)
+    # interior values: exact
+    for X in [b.M // 4, b.M // 2, (3 * b.M) // 5]:
+        got = int(extend_kawamura(b, jnp.asarray(b.residues_of(X)), targets)[0])
+        assert got == X % targets[0], X
+    # near-top values: allowed to be off by one M (documented failure band)
+    X = b.M - 1
+    got = int(extend_kawamura(b, jnp.asarray(b.residues_of(X)), targets)[0])
+    assert got in (X % targets[0], (X - b.M) % targets[0], (X + b.M) % targets[0])
+
+
+# ---------------------------------------------------------------- signed
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_signed_roundtrip_and_sign(data):
+    b = make_base(3, bits=15)
+    bound = (b.M - 1) // 2
+    v = data.draw(st.integers(-bound, bound))
+    vv = jnp.asarray([v], dtype=jnp.int64)
+    packed = encode_signed(b, vv)
+    assert bool(is_negative(b, packed)[0]) == (v < 0)
+    dec = int(rns_to_tensor(b, packed[..., :-1])[0])
+    dec = dec - b.M if dec > b.M // 2 else dec
+    assert dec == v
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_abs_threshold(data):
+    b = make_base(3, bits=15)
+    bound = (b.M - 1) // 2
+    v = data.draw(st.integers(-bound, bound))
+    thr = data.draw(st.integers(1, bound))
+    packed = encode_signed(b, jnp.asarray([v], dtype=jnp.int64))
+    assert bool(abs_ge_threshold(b, packed, thr)[0]) == (abs(v) >= thr)
+
+
+# ---------------------------------------------------------------- tensor codec
+def test_tensor_roundtrip():
+    b = make_base(3, bits=15)
+    rng = np.random.default_rng(1)
+    v = rng.integers(-(2**40), 2**40, size=(4, 5), dtype=np.int64)
+    res = tensor_to_rns(b, jnp.asarray(v))
+    back = np.asarray(rns_to_tensor(b, res))
+    back = np.where(back > b.M // 2, back - b.M, back)
+    np.testing.assert_array_equal(back, v)
+
+
+# ---------------------------------------------------------------- division
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_divmod(data):
+    b = make_base(3, bits=8)
+    X = data.draw(st.integers(0, b.M - 1))
+    D = data.draw(st.integers(1, b.M - 1))
+    xp = pack(b, jnp.asarray(b.residues_of(X)), jnp.asarray(X % b.ma))
+    dp = pack(b, jnp.asarray(b.residues_of(D)), jnp.asarray(D % b.ma))
+    q, r = divmod_rns(b, xp, dp)
+    Q = rns_to_int(b, np.asarray(q[..., :-1]))
+    R = rns_to_int(b, np.asarray(r[..., :-1]))
+    assert (Q, R) == divmod(X, D)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_parity_halve_scale(data):
+    b = BASE8
+    X = data.draw(st.integers(0, b.M - 1))
+    x = jnp.asarray(b.residues_of(X))
+    assert int(parity(b, x)) == X % 2
+    p = pack(b, x, jnp.asarray(X % b.ma))
+    h = halve(b, p)
+    assert rns_to_int(b, np.asarray(h[..., :-1])) == X // 2
+    s = scale_pow2(b, p, 3)
+    assert rns_to_int(b, np.asarray(s[..., :-1])) == X // 8
+
+
+# ---------------------------------------------------------------- Montgomery
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_montgomery_modmul(data):
+    bB = make_base(6, bits=15)
+    bBp = RNSBase(
+        moduli=tuple(int(m) for m in make_base(13, bits=15).moduli[6:12]),
+        ma=make_base(13, bits=15).moduli[12],
+        bits=15,
+    )
+    N = data.draw(st.integers(3, bB.M // 4 - 1)) | 1  # odd modulus
+    import math
+
+    if math.gcd(N, bB.M) != 1 or math.gcd(N, bBp.M) != 1:
+        return
+    mont = RNSMontgomery(bB, bBp, N)
+    X = data.draw(st.integers(0, N - 1))
+    Y = data.draw(st.integers(0, N - 1))
+    r = mont.mul(mont.to_dual(X), mont.to_dual(Y))
+    got = mont.from_dual(r)
+    Minv = pow(bB.M, -1, N)
+    assert got % N == (X * Y * Minv) % N
+    assert got < 2 * N
+
+
+# ---------------------------------------------------------- log-depth MRC
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_mrc_tree_matches_sequential(data):
+    """The divide-and-conquer (log²-depth) MRC produces identical digits to
+    the sequential Alg. 2 — supports the paper's parallel-time claim."""
+    from repro.core import mrc_tree
+
+    b = data.draw(st.sampled_from((BASE8, BASE15, BASE31)))
+    X = data.draw(st.integers(0, b.M - 1))
+    x = jnp.asarray(b.residues_of(X))
+    np.testing.assert_array_equal(
+        np.asarray(mrc_tree(b, x)), np.asarray(mrc(b, x))
+    )
+
+
+def test_mrc_tree_batched_large_base():
+    from repro.core import mrc_tree, make_base
+
+    b = make_base(33, bits=15)  # odd n exercises uneven splits
+    rng = np.random.default_rng(0)
+    m = np.asarray(b.moduli_np)
+    xs = jnp.asarray(rng.integers(0, m, size=(64, b.n)).astype(np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(mrc_tree(b, xs)), np.asarray(mrc(b, xs))
+    )

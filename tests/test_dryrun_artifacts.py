@@ -1,0 +1,38 @@
+"""Guard the dry-run deliverable: every runnable (arch x shape x mesh) cell
+has a recorded artifact, every cell fits HBM (TPU-adjusted), and the
+roofline terms are present and positive.
+"""
+import json
+import os
+
+import pytest
+
+from repro.configs import ALIASES, get_config, shape_cells
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.isdir(DRYRUN), reason="dry-run artifacts not generated"
+)
+
+
+def _cells():
+    for arch in ALIASES:
+        for shape in shape_cells(get_config(arch)):
+            for mesh in ("single", "multi"):
+                yield arch, shape, mesh
+
+
+@pytest.mark.parametrize("arch,shape,mesh", list(_cells()))
+def test_cell_recorded_and_fits(arch, shape, mesh):
+    path = os.path.join(DRYRUN, f"{arch}__{shape}__{mesh}.json")
+    assert os.path.exists(path), f"missing dry-run cell {arch}/{shape}/{mesh}"
+    with open(path) as f:
+        r = json.load(f)
+    assert r["devices"] == (512 if mesh == "multi" else 256)
+    t = r["roofline"]
+    assert t["memory_s"] > 0
+    assert t["bottleneck"] in ("compute", "memory", "collective")
+    assert r["memory"]["fits_hbm"], f"{arch}/{shape}/{mesh} over HBM"
+    if r["kind"] == "train":
+        assert 0 < r["useful_flops_ratio"] <= 1.5
