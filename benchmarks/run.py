@@ -208,6 +208,42 @@ def grad_codec():
     print(f"codec_roundtrip,0,max_err={err:.2e}(<2^-{codec.frac_bits})")
 
 
+def grad_codec_allreduce():
+    """End-to-end distributed path: rns_psum (encode -> per-channel psum ->
+    fold -> decode) vs a raw fp32 psum, under shard_map over this host's
+    'data' axis.  The delta is the codec overhead a future fused-kernel PR
+    must beat; the fused Pallas decode (interpret off-TPU) is timed alongside."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.dist.grad_codec import rns_psum
+    from repro.kernels import codec_decode_op
+
+    ndev = len(jax.devices())
+    codec = GradCodec.make(world=max(ndev, 2))
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    rng = np.random.default_rng(7)
+    for size in (1 << 14, 1 << 18):
+        g = jnp.asarray(rng.standard_normal(size).astype(np.float32))
+        sm = lambda f: jax.jit(shard_map(
+            f, mesh, in_specs=P("data"), out_specs=P("data"), check_rep=False
+        ))
+        f_rns = sm(lambda x: rns_psum(codec, x, "data"))
+        f_fp = sm(lambda x: jax.lax.psum(x, "data") / ndev)
+        t_rns = _time(f_rns, g, iters=10)
+        t_fp = _time(f_fp, g, iters=10)
+        err = float(jnp.max(jnp.abs(f_rns(g) - f_fp(g))))
+        print(f"allreduce_rns_{size},{t_rns:.1f},"
+              f"elts_per_s={size/t_rns*1e6:.2e}")
+        print(f"allreduce_fp32_{size},{t_fp:.1f},"
+              f"rns_overhead_x={t_rns/t_fp:.2f},max_dev={err:.1e}")
+        summed = jax.jit(codec.encode)(g)
+        f_fused = jax.jit(lambda p: codec_decode_op(codec, p, interpret=True))
+        t_fused = _time(f_fused, summed, iters=5)
+        print(f"allreduce_fused_decode_{size},{t_fused:.1f},"
+              f"note=interpret-mode-not-perf")
+
+
 # --------------------------------------------------------- division/scaling
 def division_scaling():
     base = make_base(4, bits=8)
@@ -234,6 +270,7 @@ TABLES = [
     mrc_parallel_depth,
     extension_methods,
     grad_codec,
+    grad_codec_allreduce,
     division_scaling,
 ]
 

@@ -1,0 +1,24 @@
+"""Distribution layer: activation sharding, spec trees, the RNS gradient
+codec, and checkpoint fault detection (DESIGN.md §8).
+
+Modules:
+    act_sharding  logical-axis activation constraints (no-ops off-mesh)
+    sharding      PartitionSpec trees for params / optimizer / batch / cache
+    grad_codec    exact RNS gradient all-reduce with the redundant channel
+    fault         tensor fingerprints + elastic checkpoint discovery
+"""
+from .act_sharding import constrain, current_mesh, use_mesh  # noqa: F401
+from .fault import (  # noqa: F401
+    find_restorable,
+    tensor_fingerprint,
+    tree_fingerprints,
+    verify_fingerprints,
+)
+from .grad_codec import GradCodec, rns_psum  # noqa: F401
+from .sharding import (  # noqa: F401
+    batch_specs,
+    cache_specs,
+    named_shardings,
+    opt_state_specs,
+    param_specs,
+)

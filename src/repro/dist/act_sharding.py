@@ -1,0 +1,146 @@
+"""Mesh-aware activation sharding constraints (DESIGN.md §8).
+
+Model code annotates activations with LOGICAL axis names::
+
+    x = constrain(x, "batch", None, "heads", None)
+
+and this module translates them to ``jax.lax.with_sharding_constraint``
+against the mesh installed by ``use_mesh`` — or does nothing at all when no
+mesh is active, so the same model code runs unmodified on a laptop CPU and
+under a 512-chip pjit lowering (the levanter/MaxText logical-axis pattern).
+
+Logical -> physical mapping:
+
+    batch                  -> the data axes ("pod", "data"), outermost kept
+                              on divisibility fallback
+    heads/kv/ff/dinner/
+    experts/vocab/seq      -> "model"
+    ?seq                   -> "model", soft: only if no other axis in the
+                              same call claimed it (KV stacks: heads take
+                              'model' when divisible, else the sequence does)
+    ?batch_plus            -> data axes PLUS "model" when unclaimed (batch-
+                              parallel attention for indivisible head counts)
+
+Every assignment is divisibility-checked against the global dim, and a mesh
+axis is never assigned twice within one call, so constraints can never make
+a program ill-formed — they only inform the partitioner.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["use_mesh", "current_mesh", "constrain", "logical_to_physical"]
+
+_ACTIVE_MESH: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_dist_active_mesh", default=None
+)
+
+# logical names that map to the tensor-parallel axis
+_MODEL_NAMES = frozenset(
+    {"heads", "kv", "ff", "dinner", "experts", "vocab", "embed", "model", "seq"}
+)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Install ``mesh`` as the active mesh for ``constrain`` calls.
+
+    Composes with the jax mesh context manager (``with mesh, use_mesh(mesh)``)
+    and nests; ``use_mesh(None)`` explicitly disables constraints inside an
+    outer active mesh.
+    """
+    token = _ACTIVE_MESH.set(mesh)
+    try:
+        yield mesh
+    finally:
+        _ACTIVE_MESH.reset(token)
+
+
+def current_mesh():
+    """The mesh installed by the innermost ``use_mesh``, or None."""
+    return _ACTIVE_MESH.get()
+
+
+def _data_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _fit(dim: int, axes: tuple[str, ...], sizes) -> tuple[str, ...]:
+    """Longest prefix-preserving assignment: drop axes from the END until the
+    remaining product divides ``dim`` (keeps 'data' when 'model' doesn't fit,
+    keeps 'pod' before 'data', etc.)."""
+    while axes:
+        prod = math.prod(sizes[a] for a in axes)
+        if prod <= 1 or dim % prod == 0:
+            return axes if prod > 1 else ()
+        axes = axes[:-1]
+    return ()
+
+
+def logical_to_physical(mesh, names, shape):
+    """Resolve logical axis names to a PartitionSpec for ``shape`` on ``mesh``.
+
+    Hard names resolve first (left to right), soft ``?``-prefixed names claim
+    whatever is left.  Returns None when nothing shards.
+    """
+    if len(names) != len(shape):
+        raise ValueError(f"{len(names)} names for rank-{len(shape)} tensor")
+    sizes = dict(mesh.shape)
+    entries: list = [None] * len(names)
+    claimed: set[str] = set()
+
+    def assign(i, axes):
+        axes = _fit(shape[i], tuple(a for a in axes if a not in claimed), sizes)
+        if axes:
+            entries[i] = axes[0] if len(axes) == 1 else axes
+            claimed.update(axes)
+
+    for i, nm in enumerate(names):
+        if nm is None or nm.startswith("?"):
+            continue
+        if nm == "batch":
+            assign(i, _data_axes(mesh))
+        elif nm in _MODEL_NAMES:
+            if "model" in sizes:
+                assign(i, ("model",))
+        else:
+            raise ValueError(f"unknown logical axis {nm!r}")
+
+    for i, nm in enumerate(names):
+        if nm is None or not nm.startswith("?"):
+            continue
+        key = nm[1:]
+        if key == "batch_plus":
+            cand = _data_axes(mesh)
+            if "model" in sizes:
+                cand = cand + ("model",)
+            assign(i, cand)
+        elif key in _MODEL_NAMES:
+            if "model" in sizes:
+                assign(i, ("model",))
+        else:
+            raise ValueError(f"unknown logical axis {nm!r}")
+
+    if all(e is None for e in entries):
+        return None
+    return P(*entries)
+
+
+def constrain(x, *names):
+    """Apply a logical sharding constraint to ``x`` — no-op off-mesh.
+
+    ``names`` has one entry per tensor axis: a logical name, a soft
+    ``"?"``-prefixed name, or None.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_physical(mesh, names, x.shape)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

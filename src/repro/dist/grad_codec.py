@@ -1,0 +1,162 @@
+"""RNS gradient codec: exact distributed gradient aggregation (paper §4-5).
+
+fp32 gradients quantize to fixed point (``frac_bits`` fractional bits), embed
+signed into the RNS ring (residue channels for the base B plus the paper's
+redundant ``m_a`` channel), and all-reduce PER CHANNEL as plain int32 sums.
+Because the channel sum of encodings equals the encoding of the sum (ring
+homomorphism, as long as the summed magnitude stays below M/2), decode after
+the psum recovers the EXACT integer sum of the quantized per-replica
+gradients — bitwise reproducible regardless of reduction order, unlike fp32
+all-reduce.
+
+The redundant channel rides along through every ring op, so sign tests,
+magnitude clips, and consistency checks are single Algorithm-1 comparisons
+(``compare_packed_ge``) — no reconstruction (DESIGN.md §4, §8).
+
+Dynamic range budget (defaults): n=3 moduli of 15 bits gives M ~ 2**45;
+``qmax = (M-1) // (2*world)`` guarantees ``world`` summed replicas stay
+inside the signed embedding, so the decode is exact and the fused Pallas
+decode kernel's 3-limb arithmetic (kernels/codec_decode.py) applies.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.base import RNSBase, make_base
+from repro.core.compare import compare_packed_ge
+from repro.core.convert import rns_to_tensor, to_ma
+from repro.core.mrc import mrc_unrolled
+from repro.core.signed import abs_ge_threshold, encode_signed, is_negative
+
+__all__ = ["GradCodec", "rns_psum"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GradCodec:
+    """Static codec configuration; hashable, closed over by jitted steps."""
+
+    base: RNSBase
+    frac_bits: int
+    world: int
+
+    @classmethod
+    def make(cls, *, world: int, n: int = 3, bits: int = 15,
+             frac_bits: int = 16) -> "GradCodec":
+        """Codec sized for ``world`` replicas: per-replica magnitudes up to
+        ``qmax`` sum without leaving the signed range (-M/2, M/2)."""
+        if world < 1:
+            raise ValueError("world must be >= 1")
+        base = make_base(n, bits=bits)
+        codec = cls(base=base, frac_bits=frac_bits, world=world)
+        if codec.qmax < 1:
+            raise ValueError(
+                f"world={world} leaves no dynamic range for base M={base.M}"
+            )
+        return codec
+
+    @property
+    def qmax(self) -> int:
+        """Max per-replica quantized magnitude (world of them sum exactly)."""
+        return (self.base.M - 1) // (2 * self.world)
+
+    @property
+    def clip(self) -> float:
+        """Float clip range implied by qmax at the quantization step."""
+        return self.qmax / (1 << self.frac_bits)
+
+    # ----------------------------------------------------------- transport
+    def encode(self, g):
+        """fp32 tensor (...,) -> packed int32 residue tensor (..., n+1).
+
+        Quantization happens in f64 (x64 is on globally) so the clip at
+        ``qmax`` (~2**35 for world=512) is exact; the residues themselves
+        are exact integer arithmetic from there on.
+        """
+        q = jnp.clip(
+            jnp.round(g.astype(jnp.float64) * (1 << self.frac_bits)),
+            -float(self.qmax), float(self.qmax),
+        ).astype(jnp.int64)
+        return encode_signed(self.base, q)
+
+    def fold(self, summed):
+        """Reduce per-channel sums back into canonical residues (< m_i)."""
+        m = jnp.asarray(
+            tuple(self.base.moduli) + (self.base.ma,), dtype=summed.dtype
+        )
+        return jnp.mod(summed, m)
+
+    def decode(self, folded):
+        """Folded packed tensor -> f32 values (exact up to the f32 cast)."""
+        v = rns_to_tensor(self.base, folded[..., :-1])
+        half = (self.base.M + 1) // 2
+        v = jnp.where(v >= half, v - self.base.M, v)
+        return (v.astype(jnp.float64) * (2.0 ** -self.frac_bits)).astype(
+            jnp.float32
+        )
+
+    # ------------------------------------------- Algorithm-1 ring queries
+    def is_negative(self, folded):
+        """Sign test without reconstruction: one Alg.-1 comparison.
+
+        Requires a CONSISTENT redundant channel (fresh encodings are; sums of
+        W > 1 replicas need ``normalize`` first — the summed embeddings wrap
+        mod M while the carried m_a channel does not)."""
+        return is_negative(self.base, folded)
+
+    def abs_ge(self, folded, thr: int):
+        """|value| >= thr (in quantized units): two Alg.-1 comparisons.
+        Same consistency requirement as ``is_negative``."""
+        return abs_ge_threshold(self.base, folded, int(thr))
+
+    def normalize(self, folded):
+        """Rebuild a consistent redundant channel from the base residues
+        (one MRC + one Alg.-3 dot — the cost of a single comparison).
+        Identity on fresh encodings; after a W-replica psum it re-anchors
+        m_a to the wrapped value so Alg.-1 queries apply to the sum."""
+        x = folded[..., :-1]
+        xa = to_ma(self.base, mrc_unrolled(self.base, x))
+        return jnp.concatenate([x, xa[..., None].astype(x.dtype)], axis=-1)
+
+    def verify_packed(self, folded):
+        """Redundant-channel consistency check (transit corruption detector).
+
+        Each replica encodes with a consistent channel, so after summing W
+        replicas ``carried - recomputed`` must equal ``k * (M mod m_a)`` mod
+        m_a where k < W counts the embeddings' wraps mod M.  Any other offset
+        means a channel was corrupted in transit — the codec-level analogue
+        of dist/fault fingerprints, at one MRC per element.
+
+        Discriminating power requires ``world < m_a``: with more replicas
+        than residues the offset family covers the whole group and every
+        channel value is accepted (the check degenerates to always-True)."""
+        x, xa = folded[..., :-1], folded[..., -1]
+        recomputed = to_ma(self.base, mrc_unrolled(self.base, x))
+        delta = jnp.mod(
+            xa.astype(jnp.int64) - recomputed.astype(jnp.int64), self.base.ma
+        )
+        # gcd(M, m_a) = 1, so the wrap count is recoverable in O(1):
+        # k = delta * (M mod m_a)^{-1} mod m_a, valid iff k <= world
+        inv = pow(self.base.M_mod_ma, -1, self.base.ma)
+        k = jnp.mod(delta * inv, self.base.ma)
+        return k <= min(self.world, self.base.ma - 1)
+
+    def range_ok(self, p1, p2):
+        """Packed-ge usable as an overflow guard: (p1 >= p2) per Alg. 1."""
+        return compare_packed_ge(self.base, p1, p2)
+
+
+def rns_psum(codec: GradCodec, g, axis_name: str):
+    """Exact mean-gradient all-reduce over a shard_map/pmap axis.
+
+    encode -> per-channel int32 psum -> fold -> decode -> / axis size.
+    The channel psum is the ONLY collective; everything else is local.
+    """
+    packed = codec.encode(g)
+    summed = jax.lax.psum(packed, axis_name)
+    # psum of an unmapped constant folds to the static axis size at trace
+    # time — no collective is emitted for it
+    nd = jax.lax.psum(1.0, axis_name)
+    return codec.decode(codec.fold(summed)) / nd

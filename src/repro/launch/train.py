@@ -88,13 +88,17 @@ def main(argv=None):
     start_step = 0
 
     if args.ckpt_dir:
-        latest = ckpt.latest_step(args.ckpt_dir)
-        if latest is not None:
-            abs_tree = jax.tree_util.tree_map(
-                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
-                {"params": params, "opt": opt_state},
-            )
+        abs_tree = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            {"params": params, "opt": opt_state},
+        )
+        try:
+            # restore directly (one scan+read+hash of the checkpoint);
+            # probing latest_step first would read and hash it all twice
             tree, start_step, _ = ckpt.restore(args.ckpt_dir, abs_tree)
+        except FileNotFoundError:
+            pass  # fresh run: nothing restorable yet
+        else:
             params, opt_state = tree["params"], tree["opt"]
             print(f"[resume] restored fingerprint-valid step {start_step}")
 

@@ -18,7 +18,12 @@ import threading
 import jax
 import numpy as np
 
-from repro.dist.fault import tree_fingerprints, verify_fingerprints, find_restorable
+from repro.dist.fault import (
+    find_restorable,
+    load_step,
+    scan_restorable,
+    tree_fingerprints,
+)
 
 __all__ = ["save", "save_async", "restore", "latest_step", "find_restorable"]
 
@@ -40,12 +45,13 @@ def save(ckpt_dir: str, step: int, tree, *, extra: dict | None = None) -> str:
     os.makedirs(tmp, exist_ok=True)
     for i, arr in enumerate(host):
         np.save(os.path.join(tmp, f"{i}.npy"), arr)
+    fps = tree_fingerprints(dict(zip(names, host)))
     manifest = {
         "step": step,
         "names": names,
-        "fingerprints": [
-            fp for fp in tree_fingerprints(dict(zip(names, host))).values()
-        ],
+        # index by name: the fingerprint dict's flatten order (sorted joined
+        # strings) need not match the source tree's flatten order
+        "fingerprints": [fps[n] for n in names],
         "extra": extra or {},
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -83,24 +89,16 @@ def restore(ckpt_dir: str, abstract_tree, shardings=None, *, step: int | None = 
     abstract_tree: pytree of ShapeDtypeStructs (or arrays) giving structure.
     shardings: matching pytree of NamedShardings (None = host arrays).
     """
-    path = (
-        os.path.join(ckpt_dir, f"step_{step}")
-        if step is not None
-        else find_restorable(ckpt_dir)
-    )
-    if path is None or not os.path.exists(os.path.join(path, "manifest.json")):
-        raise FileNotFoundError(f"no restorable checkpoint under {ckpt_dir}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    flat = {
-        k: np.load(os.path.join(path, f"{i}.npy"))
-        for i, k in enumerate(manifest["names"])
-    }
-    bad = verify_fingerprints(
-        flat, dict(zip(manifest["names"], manifest["fingerprints"]))
-    )
-    if bad:
-        raise IOError(f"checkpoint {path} corrupt: {bad}")
+    if step is not None:
+        path = os.path.join(ckpt_dir, f"step_{step}")
+        manifest, flat = load_step(path)  # FileNotFoundError / IOError
+    else:
+        # scan returns the loaded-and-verified contents, so discovery and
+        # restore cost ONE full read + hash of the checkpoint, not two
+        found = scan_restorable(ckpt_dir)
+        if found is None:
+            raise FileNotFoundError(f"no restorable checkpoint under {ckpt_dir}")
+        path, manifest, flat = found
     names, leaves, treedef = _flatten(abstract_tree)
     if names != manifest["names"]:
         raise ValueError(

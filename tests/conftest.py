@@ -1,0 +1,13 @@
+"""Shared test configuration.
+
+Puts ``src/`` on sys.path so a bare ``pytest`` works without PYTHONPATH, and
+documents the optional dev dependency policy: suites that use hypothesis
+guard their own import with ``pytest.importorskip`` so a missing optional
+dependency reports as an explicit SKIP, never a collection ERROR.
+"""
+import os
+import sys
+
+_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

@@ -7,7 +7,12 @@ modular multiplication.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed — pip install -r requirements-dev.txt",
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import jax.numpy as jnp
 

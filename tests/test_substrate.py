@@ -5,7 +5,12 @@ import os
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed — pip install -r requirements-dev.txt",
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import jax
 import jax.numpy as jnp
@@ -184,8 +189,14 @@ def test_param_spec_rules():
     from repro.configs import get_config
     from repro.models import abstract_params
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # axis_types / AxisType only exist on newer jax; the mesh is incidental
+    # here (the assertions below test the rule function directly).
+    kwargs = (
+        {"axis_types": (jax.sharding.AxisType.Auto,) * 2}
+        if hasattr(jax.sharding, "AxisType")
+        else {}
+    )
+    mesh = jax.make_mesh((1, 1), ("data", "model"), **kwargs)
     # fake a 16-wide model axis by monkeypatching shape lookups is overkill;
     # instead test the rule function directly.
     from repro.dist.sharding import _rule
