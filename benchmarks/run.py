@@ -2,7 +2,10 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call is wall time per
 logical operation on THIS host's CPU — correctness/trend data, not TPU
-numbers; the TPU story lives in the dry-run roofline).
+numbers; the TPU story lives in the dry-run roofline).  ``--json PATH``
+additionally writes the same rows as machine-readable JSON (default
+``BENCH_codec.json``) so the perf trajectory is trackable across PRs;
+``--small`` shrinks every sweep for CI smoke runs.
 
   table1_opcount       paper Table 1: modular-mult counts, ours vs classic
   compare_latency      Alg.1 vs classic 2-MRC vs approx-CRT, batched, vs n
@@ -13,6 +16,8 @@ numbers; the TPU story lives in the dry-run roofline).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import numpy as np
@@ -40,7 +45,19 @@ from repro.dist.grad_codec import GradCodec
 from repro.kernels import compare_op
 
 NS = (4, 8, 16, 32, 64)
+KERNEL_NS = (4, 8, 16)
+MRC_NS = (16, 64, 128)
 BATCH = 2048
+ALLREDUCE_SIZES = (1 << 14, 1 << 18)
+EXT_TRIALS = 512
+
+RESULTS: dict[str, dict] = {}
+
+
+def emit(name: str, us: float, derived) -> None:
+    """One benchmark row: CSV to stdout, and into the --json record."""
+    RESULTS[name] = {"us_per_call": float(us), "derived": str(derived)}
+    print(f"{name},{us:.1f},{derived}")
 
 
 def _time(fn, *args, iters=20, warmup=3):
@@ -101,9 +118,10 @@ def table1_opcount():
         N2 = int(rng.integers(0, 1 << 60)) % base.M
         measured = _instrumented_compare(base, N1, N2)
         assert measured == _count_mults_ours(n), (measured, n)
-        print(f"table1_ours_n{n},0,{measured}")
-        print(f"table1_classic_n{n},0,{_count_mults_classic(n)}")
-        print(f"table1_ratio_n{n},0,{_count_mults_classic(n)/measured:.3f}")
+        emit(f"table1_ours_n{n}", 0, measured)
+        emit(f"table1_classic_n{n}", 0, _count_mults_classic(n))
+        emit(f"table1_ratio_n{n}", 0,
+             f"{_count_mults_classic(n) / measured:.3f}")
 
 
 # ---------------------------------------------------------- compare latency
@@ -120,15 +138,15 @@ def compare_latency():
         t_ours = _time(ours, *ops)
         t_classic = _time(classic, ops[0], ops[2])
         t_approx = _time(approx, ops[0], ops[2])
-        print(f"compare_ours_n{n},{t_ours:.1f},{t_ours/BATCH*1e3:.2f}ns_elt")
-        print(f"compare_classic_n{n},{t_classic:.1f},"
-              f"speedup={t_classic/t_ours:.2f}")
-        print(f"compare_approx_n{n},{t_approx:.1f},exact=False")
+        emit(f"compare_ours_n{n}", t_ours, f"{t_ours/BATCH*1e3:.2f}ns_elt")
+        emit(f"compare_classic_n{n}", t_classic,
+             f"speedup={t_classic/t_ours:.2f}")
+        emit(f"compare_approx_n{n}", t_approx, "exact=False")
 
 
 def compare_kernel():
     rng = np.random.default_rng(2)
-    for n in (4, 8, 16):
+    for n in KERNEL_NS:
         base = make_base(n, bits=15)
         ops = _rand_operands(base, 512, rng)
         fused = lambda a, b, c, d: compare_op(base, a, b, c, d, interpret=True)
@@ -136,8 +154,8 @@ def compare_kernel():
         t_f = _time(fused, *ops, iters=5)
         t_r = _time(ref, *ops, iters=5)
         ok = bool(jnp.all(fused(*ops) == ref(*ops)))
-        print(f"kernel_fused_interp_n{n},{t_f:.1f},match={ok}")
-        print(f"kernel_ref_jit_n{n},{t_r:.1f},note=interpret-mode-not-perf")
+        emit(f"kernel_fused_interp_n{n}", t_f, f"match={ok}")
+        emit(f"kernel_ref_jit_n{n}", t_r, "note=interpret-mode-not-perf")
 
 
 def mrc_parallel_depth():
@@ -147,7 +165,7 @@ def mrc_parallel_depth():
     import math
 
     rng = np.random.default_rng(6)
-    for n in (16, 64, 128):
+    for n in MRC_NS:
         base = make_base(n, bits=15)
         m = np.asarray(base.moduli_np)
         xs = jnp.asarray(rng.integers(0, m, size=(256, n)).astype(np.int32))
@@ -156,9 +174,9 @@ def mrc_parallel_depth():
         assert bool(jnp.all(f_seq(xs) == f_tree(xs)))
         d_seq = n - 1
         d_tree = int(math.ceil(math.log2(n))) ** 2
-        print(f"mrc_seq_n{n},{_time(f_seq, xs, iters=5):.1f},depth={d_seq}")
-        print(f"mrc_tree_n{n},{_time(f_tree, xs, iters=5):.1f},"
-              f"depth~log2(n)^2={d_tree}")
+        emit(f"mrc_seq_n{n}", _time(f_seq, xs, iters=5), f"depth={d_seq}")
+        emit(f"mrc_tree_n{n}", _time(f_tree, xs, iters=5),
+             f"depth~log2(n)^2={d_tree}")
 
 
 # ------------------------------------------------------- extension methods
@@ -167,7 +185,7 @@ def extension_methods():
     n = 16
     base = make_base(n, bits=15)
     targets = (32603, 32587)
-    trials = 512
+    trials = EXT_TRIALS
     Ns = [int(rng.integers(0, 1 << 62)) % base.M for _ in range(trials - 4)]
     Ns += [0, 1, base.M - 1, base.M - 2]  # adversarial edges
     xs = jnp.asarray(np.stack([base.residues_of(N) for N in Ns]))
@@ -181,18 +199,21 @@ def extension_methods():
     acc_mrc = float(np.mean(np.all(np.asarray(f_mrc(xs)) == want, -1)))
     acc_sh = float(np.mean(np.all(np.asarray(f_sh(xs, xr)) == want, -1)))
     acc_kw = float(np.mean(np.all(np.asarray(f_kw(xs)) == want, -1)))
-    print(f"extend_mrc,{_time(f_mrc, xs):.1f},exact={acc_mrc:.4f}")
-    print(f"extend_shenoy,{_time(f_sh, xs, xr):.1f},exact={acc_sh:.4f}")
-    print(f"extend_kawamura,{_time(f_kw, xs):.1f},exact={acc_kw:.4f}")
+    emit("extend_mrc", _time(f_mrc, xs), f"exact={acc_mrc:.4f}")
+    emit("extend_shenoy", _time(f_sh, xs, xr), f"exact={acc_sh:.4f}")
+    emit("extend_kawamura", _time(f_kw, xs), f"exact={acc_kw:.4f}")
     assert acc_mrc == 1.0 and acc_sh == 1.0  # exact methods must be exact
 
 
 # --------------------------------------------------------------- grad codec
 def grad_codec():
+    from repro.kernels import codec_encode_op
+
     codec = GradCodec.make(world=512)
     rng = np.random.default_rng(4)
     g = jnp.asarray(rng.standard_normal((1 << 16,)).astype(np.float32))
     enc = jax.jit(codec.encode)
+    enc_fused = jax.jit(lambda x: codec_encode_op(codec, x))
     dec = jax.jit(lambda p: codec.decode(codec.fold(p)))
     packed = enc(g)
     wire_bits = packed.shape[-1] * 16  # residues fit int16 lanes on the wire
@@ -200,48 +221,95 @@ def grad_codec():
     # replicas, whose scalar equivalent is int64 (int32 overflows, fp32 is
     # lossy/non-deterministic).  vs fp32 the wire costs 2x — recorded
     # honestly; the win is exactness + per-channel independence (paper §1).
-    print(f"codec_encode,{_time(enc, g):.1f},wire_bits_per_elt={wire_bits}")
-    print(f"codec_decode,{_time(dec, packed):.1f},"
-          f"vs_exact_int64_ratio={wire_bits/64:.2f},vs_fp32_ratio="
-          f"{wire_bits/32:.2f}")
+    emit("codec_encode", _time(enc, g), f"wire_bits_per_elt={wire_bits}")
+    bitwise = bool(jnp.all(enc_fused(g) == packed))
+    emit("codec_encode_fused", _time(enc_fused, g), f"bitwise={bitwise}")
+    emit("codec_decode", _time(dec, packed),
+         f"vs_exact_int64_ratio={wire_bits/64:.2f},vs_fp32_ratio="
+         f"{wire_bits/32:.2f}")
     err = float(jnp.max(jnp.abs(dec(packed) - g)))
-    print(f"codec_roundtrip,0,max_err={err:.2e}(<2^-{codec.frac_bits})")
+    emit("codec_roundtrip", 0, f"max_err={err:.2e}(<2^-{codec.frac_bits})")
 
 
 def grad_codec_allreduce():
-    """End-to-end distributed path: rns_psum (encode -> per-channel psum ->
-    fold -> decode) vs a raw fp32 psum, under shard_map over this host's
-    'data' axis.  The delta is the codec overhead a future fused-kernel PR
-    must beat; the fused Pallas decode (interpret off-TPU) is timed alongside."""
+    """End-to-end distributed path under shard_map over this host's 'data'
+    axis, recorded at three granularities:
+
+      allreduce_rns_*          per-tensor rns_psum, jnp codec (historical)
+      allreduce_rns_fused_*    per-tensor rns_psum, fused Pallas codec
+      allreduce_fp32_*         raw fp32 psum baseline
+      allreduce_{fused,jnp}_decode_*  decode alone, fed the REAL post-psum
+                               summed channels (not fresh encodings)
+      allreduce_rns_per_leaf_* / allreduce_rns_tree_* / _tree_unfused_*
+                               an 8-leaf pytree: one collective per leaf vs
+                               the single-buffer bucketed psum
+    """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import Mesh, PartitionSpec as P
 
-    from repro.dist.grad_codec import rns_psum
+    from repro.dist.grad_codec import rns_psum, rns_psum_tree
     from repro.kernels import codec_decode_op
 
     ndev = len(jax.devices())
-    codec = GradCodec.make(world=max(ndev, 2))
+    world = max(ndev, 2)
+    codec = GradCodec.make(world=world)                  # fused transport
+    codec_jnp = GradCodec.make(world=world, fused=False)
     mesh = Mesh(np.array(jax.devices()), ("data",))
     rng = np.random.default_rng(7)
-    for size in (1 << 14, 1 << 18):
+    for size in ALLREDUCE_SIZES:
         g = jnp.asarray(rng.standard_normal(size).astype(np.float32))
         sm = lambda f: jax.jit(shard_map(
             f, mesh, in_specs=P("data"), out_specs=P("data"), check_rep=False
         ))
-        f_rns = sm(lambda x: rns_psum(codec, x, "data"))
+        f_rns = sm(lambda x: rns_psum(codec_jnp, x, "data"))
+        f_rns_fused = sm(lambda x: rns_psum(codec, x, "data"))
         f_fp = sm(lambda x: jax.lax.psum(x, "data") / ndev)
         t_rns = _time(f_rns, g, iters=10)
+        t_rns_fused = _time(f_rns_fused, g, iters=10)
         t_fp = _time(f_fp, g, iters=10)
         err = float(jnp.max(jnp.abs(f_rns(g) - f_fp(g))))
-        print(f"allreduce_rns_{size},{t_rns:.1f},"
-              f"elts_per_s={size/t_rns*1e6:.2e}")
-        print(f"allreduce_fp32_{size},{t_fp:.1f},"
-              f"rns_overhead_x={t_rns/t_fp:.2f},max_dev={err:.1e}")
-        summed = jax.jit(codec.encode)(g)
-        f_fused = jax.jit(lambda p: codec_decode_op(codec, p, interpret=True))
-        t_fused = _time(f_fused, summed, iters=5)
-        print(f"allreduce_fused_decode_{size},{t_fused:.1f},"
-              f"note=interpret-mode-not-perf")
+        bitwise = bool(jnp.all(f_rns(g) == f_rns_fused(g)))
+        emit(f"allreduce_rns_{size}", t_rns,
+             f"elts_per_s={size/t_rns*1e6:.2e}")
+        emit(f"allreduce_rns_fused_{size}", t_rns_fused,
+             f"speedup_vs_jnp={t_rns/t_rns_fused:.2f},bitwise={bitwise}")
+        emit(f"allreduce_fp32_{size}", t_fp,
+             f"rns_overhead_x={t_rns_fused/t_fp:.2f},max_dev={err:.1e}")
+
+        # decode alone, on the REAL post-psum summed channels (what the
+        # optimizer-side decode actually sees — not fresh encodings)
+        summed = sm(lambda x: jax.lax.psum(codec_jnp.encode(x), "data"))(g)
+        f_fused_dec = jax.jit(lambda p: codec_decode_op(codec, p))
+        f_jnp_dec = jax.jit(lambda p: codec_jnp.decode(codec_jnp.fold(p)))
+        t_fused_dec = _time(f_fused_dec, summed, iters=10)
+        t_jnp_dec = _time(f_jnp_dec, summed, iters=10)
+        emit(f"allreduce_fused_decode_{size}", t_fused_dec,
+             f"speedup_vs_jnp={t_jnp_dec/t_fused_dec:.2f}")
+        emit(f"allreduce_jnp_decode_{size}", t_jnp_dec, "post-psum-input")
+
+        # bucketing: an 8-leaf pytree as one collective per leaf vs ONE
+        # single-buffer per-channel psum (tree_pack), fused and unfused
+        tree = {
+            f"leaf{i}": jnp.asarray(
+                rng.standard_normal(size // 8).astype(np.float32)
+            )
+            for i in range(8)
+        }
+        smt = lambda f: jax.jit(shard_map(
+            f, mesh, in_specs=(P(),), out_specs=P(), check_rep=False
+        ))
+        f_leaf = smt(lambda t: jax.tree_util.tree_map(
+            lambda x: rns_psum(codec_jnp, x, "data"), t))
+        f_tree = smt(lambda t: rns_psum_tree(codec, t, "data"))
+        f_tree_u = smt(lambda t: rns_psum_tree(codec_jnp, t, "data"))
+        t_leaf = _time(f_leaf, tree, iters=10)
+        t_tree = _time(f_tree, tree, iters=10)
+        t_tree_u = _time(f_tree_u, tree, iters=10)
+        emit(f"allreduce_rns_per_leaf_{size}", t_leaf, "collectives=8")
+        emit(f"allreduce_rns_tree_{size}", t_tree,
+             f"collectives=1,speedup_vs_per_leaf={t_leaf/t_tree:.2f}")
+        emit(f"allreduce_rns_tree_unfused_{size}", t_tree_u,
+             f"collectives=1,fused_speedup={t_tree_u/t_tree:.2f}")
 
 
 # --------------------------------------------------------- division/scaling
@@ -257,10 +325,10 @@ def division_scaling():
     ok = (rns_to_int(base, np.asarray(q[..., :-1])),
           rns_to_int(base, np.asarray(r[..., :-1]))) == divmod(X, D)
     ncmp = 2 * base.M.bit_length() + 1
-    print(f"divmod_rns,{_time(f_div, xp, dp, iters=5):.1f},"
-          f"comparisons={ncmp},correct={ok}")
+    emit("divmod_rns", _time(f_div, xp, dp, iters=5),
+         f"comparisons={ncmp},correct={ok}")
     f_h = jax.jit(lambda a: halve(base, a))
-    print(f"scale_halve,{_time(f_h, xp):.1f},exact=True")
+    emit("scale_halve", _time(f_h, xp), "exact=True")
 
 
 TABLES = [
@@ -275,10 +343,29 @@ TABLES = [
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    global NS, KERNEL_NS, MRC_NS, BATCH, ALLREDUCE_SIZES, EXT_TRIALS
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", nargs="?", const="BENCH_codec.json",
+                    default=None, metavar="PATH",
+                    help="also write rows as JSON (default BENCH_codec.json)")
+    ap.add_argument("--small", action="store_true",
+                    help="CI smoke sizes: trimmed sweeps, same coverage")
+    args = ap.parse_args(argv)
+    if args.small:
+        NS = (4, 8)
+        KERNEL_NS = (4,)
+        MRC_NS = (16,)
+        BATCH = 256
+        ALLREDUCE_SIZES = (1 << 12,)
+        EXT_TRIALS = 64
     print("name,us_per_call,derived")
     for fn in TABLES:
         fn()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(RESULTS, f, indent=1, sort_keys=True)
+        print(f"# wrote {len(RESULTS)} rows to {args.json}")
 
 
 if __name__ == "__main__":

@@ -16,11 +16,25 @@ magnitude clips, and consistency checks are single Algorithm-1 comparisons
 Dynamic range budget (defaults): n=3 moduli of 15 bits gives M ~ 2**45;
 ``qmax = (M-1) // (2*world)`` guarantees ``world`` summed replicas stay
 inside the signed embedding, so the decode is exact and the fused Pallas
-decode kernel's 3-limb arithmetic (kernels/codec_decode.py) applies.
+kernels' 3-limb arithmetic (kernels/codec_{encode,decode}.py) applies.
+
+Transport comes in two granularities (DESIGN.md §9):
+
+* ``rns_psum``     — one tensor, one per-channel psum (the original path).
+* ``rns_psum_tree``— the WHOLE grad pytree flattened into one contiguous
+  (n+1, B_total) int32 buffer, moved in a single per-channel psum
+  (NCCL-style bucketing) and unflattened after the fused decode.  One
+  collective per step instead of one per leaf.
+
+Both dispatch encode/decode to the fused Pallas kernels when the codec's
+``fused`` knob is on and the base qualifies (bits <= 15 and M < 2**45 —
+the 3x15-bit limb discipline); otherwise they fall back to the exact jnp
+path automatically.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +45,8 @@ from repro.core.convert import rns_to_tensor, to_ma
 from repro.core.mrc import mrc_unrolled
 from repro.core.signed import abs_ge_threshold, encode_signed, is_negative
 
-__all__ = ["GradCodec", "rns_psum"]
+__all__ = ["GradCodec", "rns_psum", "rns_psum_tree", "tree_pack",
+           "tree_decode"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,21 +56,37 @@ class GradCodec:
     base: RNSBase
     frac_bits: int
     world: int
+    fused: bool = True
 
     @classmethod
     def make(cls, *, world: int, n: int = 3, bits: int = 15,
-             frac_bits: int = 16) -> "GradCodec":
+             frac_bits: int = 16, fused: bool = True) -> "GradCodec":
         """Codec sized for ``world`` replicas: per-replica magnitudes up to
-        ``qmax`` sum without leaving the signed range (-M/2, M/2)."""
+        ``qmax`` sum without leaving the signed range (-M/2, M/2).
+
+        ``fused`` enables the Pallas encode/decode kernels on the transport
+        path when the base qualifies (see ``use_fused``); the jnp path is
+        always available and bitwise identical.
+        """
         if world < 1:
             raise ValueError("world must be >= 1")
         base = make_base(n, bits=bits)
-        codec = cls(base=base, frac_bits=frac_bits, world=world)
+        codec = cls(base=base, frac_bits=frac_bits, world=world, fused=fused)
         if codec.qmax < 1:
             raise ValueError(
                 f"world={world} leaves no dynamic range for base M={base.M}"
             )
         return codec
+
+    @property
+    def use_fused(self) -> bool:
+        """True when transport runs the fused Pallas kernels: the knob is on
+        AND the base fits the kernels' limb discipline (15-bit int32 lanes,
+        M < 2**45 for the 3x15-bit Horner).  Wider bases silently take the
+        exact jnp path — same bits on the wire, more HBM round-trips."""
+        return (
+            self.fused and self.base.bits <= 15 and self.base.M < (1 << 45)
+        )
 
     @property
     def qmax(self) -> int:
@@ -71,15 +102,51 @@ class GradCodec:
     def encode(self, g):
         """fp32 tensor (...,) -> packed int32 residue tensor (..., n+1).
 
-        Quantization happens in f64 (x64 is on globally) so the clip at
-        ``qmax`` (~2**35 for world=512) is exact; the residues themselves
-        are exact integer arithmetic from there on.
+        Quantization happens in f64 so the clip at ``qmax`` (~2**35 for
+        world=512) is exact; the residues themselves are exact integer
+        arithmetic from there on.  Requires global x64 (repro/__init__
+        enables it) — without it jax silently degrades f64 to f32 and the
+        clip/residues go wrong, so refuse loudly.  The fused kernel path
+        (``encode_packed`` with ``use_fused``) has no such dependency.
         """
+        if not jax.config.jax_enable_x64:
+            raise RuntimeError(
+                "GradCodec.encode requires jax_enable_x64: the exact f64 "
+                "quantize/clip silently degrades to f32 without it "
+                "(import repro enables x64, or use the fused kernel path)"
+            )
         q = jnp.clip(
             jnp.round(g.astype(jnp.float64) * (1 << self.frac_bits)),
             -float(self.qmax), float(self.qmax),
         ).astype(jnp.int64)
         return encode_signed(self.base, q)
+
+    def encode_packed(self, g, *, channel_major: bool = False):
+        """Transport-path encode: the fused Pallas kernel when ``use_fused``
+        else the jnp path — bitwise-identical residues either way.
+
+        channel_major=True returns the kernel-native (n+1, B) layout for a
+        flat (B,) input (the bucketed pipeline's wire format)."""
+        if self.use_fused:
+            from repro.kernels import codec_encode_op
+
+            return codec_encode_op(self, g, channel_major=channel_major)
+        if channel_major:
+            # match the kernel's layout exactly: ravel THEN transpose, so
+            # non-1D inputs don't come out axis-reversed on the fallback
+            return self.encode(jnp.ravel(g)).T
+        return self.encode(g)
+
+    def decode_summed(self, summed, *, channel_major: bool = False):
+        """Transport-path decode of post-psum channel sums: fused
+        fold->MRC->Horner->sign->scale kernel when ``use_fused`` else the
+        jnp fold+decode — bitwise-identical f32 either way."""
+        if self.use_fused:
+            from repro.kernels import codec_decode_op
+
+            return codec_decode_op(self, summed, channel_major=channel_major)
+        folded = self.fold(summed.T if channel_major else summed)
+        return self.decode(folded)
 
     def fold(self, summed):
         """Reduce per-channel sums back into canonical residues (< m_i)."""
@@ -152,11 +219,76 @@ def rns_psum(codec: GradCodec, g, axis_name: str):
     """Exact mean-gradient all-reduce over a shard_map/pmap axis.
 
     encode -> per-channel int32 psum -> fold -> decode -> / axis size.
-    The channel psum is the ONLY collective; everything else is local.
+    The channel psum is the ONLY collective; everything else is local, and
+    encode/decode run fused (Pallas) when the codec qualifies.
     """
-    packed = codec.encode(g)
+    packed = codec.encode_packed(g)
     summed = jax.lax.psum(packed, axis_name)
     # psum of an unmapped constant folds to the static axis size at trace
     # time — no collective is emitted for it
     nd = jax.lax.psum(1.0, axis_name)
-    return codec.decode(codec.fold(summed)) / nd
+    return codec.decode_summed(summed) / nd
+
+
+# ------------------------------------------------------ bucketed transport
+@dataclasses.dataclass(frozen=True)
+class _TreeMeta:
+    """Trace-time bookkeeping for the single-buffer layout (static)."""
+
+    treedef: object
+    shapes: tuple[tuple[int, ...], ...]
+    dtypes: tuple[object, ...]
+
+    @property
+    def sizes(self) -> tuple[int, ...]:
+        return tuple(math.prod(s) for s in self.shapes)
+
+
+def tree_pack(codec: GradCodec, grads):
+    """Flatten a grad pytree into ONE contiguous (n+1, B_total) int32 wire
+    buffer (encode fused when the codec qualifies).
+
+    Returns ``(buf, meta)``; ``meta`` is static trace-time layout info for
+    ``tree_decode``.  This is the NCCL-style bucketing move: the whole tree
+    then all-reduces in a single per-channel psum instead of one collective
+    per leaf.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    if not leaves:
+        raise ValueError("tree_pack: empty gradient pytree")
+    meta = _TreeMeta(
+        treedef=treedef,
+        shapes=tuple(tuple(l.shape) for l in leaves),
+        dtypes=tuple(l.dtype for l in leaves),
+    )
+    flat = jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves])
+    return codec.encode_packed(flat, channel_major=True), meta
+
+
+def tree_decode(codec: GradCodec, summed, meta: _TreeMeta, denom=1.0):
+    """Post-psum (n+1, B_total) channel sums -> grad pytree / ``denom``.
+
+    Decode runs fused (one HBM round-trip) when the codec qualifies; the
+    flat result is sliced back into leaves with ``meta``'s layout and cast
+    to each leaf's original dtype.
+    """
+    flat = codec.decode_summed(summed, channel_major=True) / denom
+    leaves, off = [], 0
+    for shape, dtype, size in zip(meta.shapes, meta.dtypes, meta.sizes):
+        leaves.append(flat[off : off + size].reshape(shape).astype(dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(meta.treedef, leaves)
+
+
+def rns_psum_tree(codec: GradCodec, grads, axis_name: str):
+    """Exact mean-gradient all-reduce of an ENTIRE pytree in one collective.
+
+    tree_pack -> one per-channel int32 psum over the (n+1, B_total) bucket
+    -> fused decode -> unflatten.  Exactness is per element, so bucketing
+    changes nothing semantically — it only amortizes collective latency
+    that the per-leaf path pays once per tensor.
+    """
+    buf, meta = tree_pack(codec, grads)
+    summed = jax.lax.psum(buf, axis_name)  # the ONLY collective
+    nd = jax.lax.psum(1.0, axis_name)      # folds to a constant at trace
+    return tree_decode(codec, summed, meta, denom=nd)

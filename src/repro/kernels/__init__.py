@@ -3,5 +3,11 @@
 Kernels: mrc (Alg. 2), modmul (ring product), rns_compare (fused Alg. 1).
 Each has a pure-jnp oracle in ref.py and a public wrapper in ops.py.
 """
-from .ops import mrc_op, modmul_op, compare_op, codec_decode_op  # noqa: F401
+from .ops import (  # noqa: F401
+    codec_decode_op,
+    codec_encode_op,
+    compare_op,
+    modmul_op,
+    mrc_op,
+)
 from .ref import ref_mrc, ref_modmul, ref_compare, ref_to_ma  # noqa: F401

@@ -7,8 +7,8 @@ channels.  Per (n+1, BLOCK_B) tile this kernel fuses:
     MRC     residues -> digits            (Alg. 2 triangle, in-register)
     Horner  digits -> value v in [0, M)   (3x15-bit limbs, int32-exact)
     sign    v >= ceil(M/2) ? v - M : v    (limb-wise compare & subtract)
-    cast    f32 at 2^-24 RELATIVE rounding — below what an f32 gradient
-            can represent anyway (the limb arithmetic itself is exact)
+    cast    correctly-rounded f32 of the exact integer v via a Fast2Sum
+            compensated limb sum — bitwise identical to the f64 jnp path
 
 The unfused jnp path round-trips the tensor through HBM four times; fused
 it is once.  Limb arithmetic bounds (all int32):
@@ -71,11 +71,19 @@ def _kernel(x_ref, invt_ref, m_ref, half_ref, out_ref, *, n, inv_scale):
     s0 = jnp.where(ge, b0 + (bor0 << 15), l0)
     s1 = jnp.where(ge, b1 + (bor1 << 15), l1)
     s2 = jnp.where(ge, b2, l2)
-    val = (
-        s2.astype(jnp.float32) * jnp.float32(float(1 << 30))
-        + s1.astype(jnp.float32) * jnp.float32(float(1 << 15))
-        + s0.astype(jnp.float32)
-    )
+    # Correctly-rounded f32 of v = s2*2^30 + s1*2^15 + s0 (s2 may be
+    # negative after the signed fold).  Each term is exact in f32; naive
+    # summation double-rounds, so compensate: Fast2Sum(a2, a1) is valid
+    # because |a2| >= 2^30 > |a1| whenever s2 != 0 (and exact trivially at
+    # s2 == 0), and the residual e1 + a0 is an integer < 2^24, hence exact.
+    # The final add then rounds the EXACT v once — matching the jnp path's
+    # f64->f32 cast bit for bit (inv_scale is a power of two: exact).
+    a2 = s2.astype(jnp.float32) * jnp.float32(float(1 << 30))
+    a1 = s1.astype(jnp.float32) * jnp.float32(float(1 << 15))
+    a0 = s0.astype(jnp.float32)
+    t1 = a2 + a1
+    e1 = a1 - (t1 - a2)
+    val = t1 + (e1 + a0)
     out_ref[...] = val * jnp.float32(inv_scale)
 
 

@@ -21,7 +21,8 @@ from .modmul import modmul_kernel_call
 from .mrc import mrc_kernel_call
 from .rns_compare import compare_kernel_call
 
-__all__ = ["mrc_op", "modmul_op", "compare_op"]
+__all__ = ["mrc_op", "modmul_op", "compare_op", "codec_encode_op",
+           "codec_decode_op"]
 
 
 def _interpret_default() -> bool:
@@ -103,10 +104,22 @@ def compare_op(
     return out[0, :B].reshape(lead).astype(bool)
 
 
-def codec_decode_op(codec, summed, *, block_b: int = 1024,
-                    interpret: bool | None = None):
+def _auto_block(nelems: int, interpret: bool) -> int:
+    """Default tile width: 1024 keeps compiled tiles VMEM-friendly on TPU;
+    the interpreter has no VMEM and pays per grid step, so it takes the
+    whole (padded) buffer as one tile."""
+    return max(1, nelems) if interpret else 1024
+
+
+def codec_decode_op(codec, summed, *, block_b: int | None = None,
+                    interpret: bool | None = None,
+                    channel_major: bool = False):
     """Fused gradient-codec decode: summed channels (..., n+1) -> f32 mean
-    gradient contribution (caller divides by world).  See codec_decode.py."""
+    gradient contribution (caller divides by world).  See codec_decode.py.
+
+    channel_major=True takes the kernel-native (n+1, B) layout directly and
+    returns (B,) — the zero-transpose path used by the bucketed pipeline.
+    """
     from .codec_decode import codec_decode_kernel_call
 
     base = codec.base
@@ -120,12 +133,62 @@ def codec_decode_op(codec, summed, *, block_b: int = 1024,
         [[T & 0x7FFF], [(T >> 15) & 0x7FFF], [T >> 30],
          [M & 0x7FFF], [(M >> 15) & 0x7FFF], [M >> 30]], dtype=jnp.int32,
     )
-    flat, lead = _flatten_batch(summed.astype(jnp.int32))
-    xt, B = _pad_to(flat.T, block_b, axis=1)
+    if channel_major:
+        flat_t, lead = summed.astype(jnp.int32), None
+    else:
+        flat, lead = _flatten_batch(summed.astype(jnp.int32))
+        flat_t = flat.T
+    if block_b is None:
+        block_b = _auto_block(flat_t.shape[1], interpret)
+    xt, B = _pad_to(flat_t, block_b, axis=1)
     block_b = min(block_b, xt.shape[1])
     out = codec_decode_kernel_call(
         xt, inv_t, m_col, half_col, n=base.n,
         inv_scale=1.0 / (1 << codec.frac_bits),
         block_b=block_b, interpret=interpret,
     )
-    return out[0, :B].reshape(lead)
+    return out[0, :B] if channel_major else out[0, :B].reshape(lead)
+
+
+def codec_encode_op(codec, g, *, block_b: int | None = None,
+                    interpret: bool | None = None,
+                    channel_major: bool = False):
+    """Fused gradient-codec encode: f32 tensor (...,) -> packed int32
+    residues (..., n+1), bitwise identical to ``GradCodec.encode`` (which
+    needs global x64; this kernel does not).  See codec_encode.py.
+
+    channel_major=True returns the kernel-native (n+1, B) layout for a
+    flat (B,) input — the zero-transpose path used by the bucketed
+    pipeline (the decode kernel consumes it directly).
+    """
+    from .codec_encode import codec_encode_kernel_call
+
+    base = codec.base
+    if base.M >= 1 << 45:
+        raise ValueError("codec encode kernel requires M < 2**45 "
+                         "(qmax limbs must fit 2x15-bit + int32 high part)")
+    if base.bits > 15:
+        raise ValueError("Pallas kernels require bits<=15 (int32 lanes); "
+                         "use GradCodec.encode for wider bases")
+    interpret = _interpret_default() if interpret is None else interpret
+    m_all = jnp.asarray(
+        np.concatenate([base.moduli_np, [base.ma]])[:, None], dtype=jnp.int32
+    )
+    pow15 = jnp.asarray(
+        [[(1 << 15) % int(m)] for m in base.moduli] + [[(1 << 15) % base.ma]],
+        dtype=jnp.int32,
+    )
+    lead = g.shape if not channel_major else None
+    row = g.astype(jnp.float32).reshape(1, -1)
+    if block_b is None:
+        block_b = _auto_block(row.shape[1], interpret)
+    gt, B = _pad_to(row, block_b, axis=1)
+    block_b = min(block_b, gt.shape[1])
+    out = codec_encode_kernel_call(
+        gt, m_all, pow15, n=base.n, scale=float(1 << codec.frac_bits),
+        qh=codec.qmax >> 15, ql=codec.qmax & 0x7FFF,
+        ma_off=base.M_mod_ma, block_b=block_b, interpret=interpret,
+    )
+    if channel_major:
+        return out[:, :B]
+    return out[:, :B].T.reshape(*lead, base.n + 1)

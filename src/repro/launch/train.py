@@ -23,36 +23,24 @@ from repro.models import init_params
 from repro.train import checkpoint as ckpt
 from repro.train.data import Prefetcher, SyntheticLM
 from repro.train.optimizer import AdamWConfig, adamw_init
-from repro.train.train_step import make_loss_fn, make_train_step
+from repro.train.train_step import make_train_step
 
 
 def make_rns_dp_step(cfg, opt_cfg, codec):
-    """Data-parallel step with the paper's RNS-exact gradient all-reduce:
-    per-device grads -> residue channels -> psum -> fold -> decode (see
-    dist/grad_codec.py).  Runs under shard_map over the 'data' axis."""
+    """Data-parallel step with the paper's RNS-exact gradient all-reduce,
+    bucketed: per-device grads encode (fused Pallas kernel when the codec
+    qualifies) into ONE contiguous (n+1, B_total) int32 buffer, the whole
+    pytree moves in a single per-channel psum, and the fused decode runs at
+    the optimizer boundary inside ``adamw_update`` (dist/grad_codec.py,
+    DESIGN.md §9).  Runs under shard_map over the 'data' axis."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import Mesh, PartitionSpec as P
 
-    from repro.dist.grad_codec import rns_psum
-    from repro.train.optimizer import adamw_update
-
-    loss_fn = make_loss_fn(cfg)
-    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
     ndev = len(jax.devices())
     mesh = Mesh(np.array(jax.devices()), ("data",))
-
-    def per_shard(params, opt_state, batch):
-        (loss, (ce, aux)), grads = grad_fn(params, batch)
-        grads = jax.tree_util.tree_map(
-            lambda g: rns_psum(codec, g, "data"), grads
-        )
-        loss = jax.lax.pmean(loss, "data")
-        params, opt_state, gnorm = adamw_update(opt_cfg, params, grads, opt_state)
-        return params, opt_state, {"loss": loss, "ce": ce, "aux": aux,
-                                   "gnorm": gnorm}
-
+    step = make_train_step(cfg, opt_cfg, rns_codec=codec, rns_axis="data")
     fn = shard_map(
-        per_shard, mesh,
+        step, mesh,
         in_specs=(P(), P(), P("data")),
         out_specs=(P(), P(), P()),
         check_rep=False,
@@ -73,6 +61,9 @@ def main(argv=None):
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--rns-allreduce", action="store_true",
                     help="use the paper's RNS gradient aggregation (DP demo)")
+    ap.add_argument("--unfused-codec", action="store_true",
+                    help="force the jnp encode/decode path for the RNS "
+                         "codec (A/B against the fused Pallas kernels)")
     ap.add_argument("--watchdog-x", type=float, default=3.0,
                     help="warn when a step exceeds x * median step time")
     args = ap.parse_args(argv)
@@ -105,11 +96,14 @@ def main(argv=None):
     if args.rns_allreduce:
         from repro.dist.grad_codec import GradCodec
 
-        codec = GradCodec.make(world=max(len(jax.devices()), 2))
+        codec = GradCodec.make(world=max(len(jax.devices()), 2),
+                               fused=not args.unfused_codec)
         step_fn, ndev = make_rns_dp_step(cfg, opt_cfg, codec)
         assert args.batch % ndev == 0, "batch must divide device count"
         print(f"[rns] RNS gradient all-reduce over {ndev} device(s), "
-              f"base n={codec.base.n} moduli, m_a={codec.base.ma}")
+              f"base n={codec.base.n} moduli, m_a={codec.base.ma}, "
+              f"bucketed single-psum transport, "
+              f"{'fused Pallas' if codec.use_fused else 'jnp'} codec")
     else:
         step_fn = jax.jit(
             make_train_step(cfg, opt_cfg, microbatches=args.microbatches)

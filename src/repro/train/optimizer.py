@@ -64,7 +64,16 @@ def global_norm(tree):
     )
 
 
-def adamw_update(cfg: AdamWConfig, params, grads, opt_state):
+def adamw_update(cfg: AdamWConfig, params, grads, opt_state, *,
+                 grad_decode=None):
+    """``grad_decode``, when given, maps the raw ``grads`` argument to the
+    parameter-shaped gradient pytree before any use.  This is the seam the
+    RNS gradient codec plugs into: the train step hands over the post-psum
+    packed channel buffer and the fused Pallas decode (one HBM round-trip)
+    runs HERE, at the optimizer boundary — the transport stays integer all
+    the way to the update (DESIGN.md §9)."""
+    if grad_decode is not None:
+        grads = grad_decode(grads)
     step = opt_state["step"] + 1
     gnorm = global_norm(grads)
     scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))

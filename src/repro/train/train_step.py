@@ -40,14 +40,23 @@ def make_loss_fn(cfg):
 
 
 def make_train_step(
-    cfg, opt_cfg: AdamWConfig, *, microbatches: int = 1, grad_shardings=None
+    cfg, opt_cfg: AdamWConfig, *, microbatches: int = 1, grad_shardings=None,
+    rns_codec=None, rns_axis: str = "data",
 ):
     """grad_shardings: optional NamedSharding tree matching params.  Pins
     gradients to the PARAMETER sharding so ZeRO-1's differently-sharded
     optimizer moments reshard at the optimizer boundary (reduce-scatter /
     all-gather) instead of leaking their sharding into the backward pass
     (measured: un-pinned, the partitioner partially shards attention dots by
-    head_dim and all-reduces every score block)."""
+    head_dim and all-reduces every score block).
+
+    rns_codec: optional ``dist.grad_codec.GradCodec``.  When given, the step
+    must run under shard_map/pmap with a ``rns_axis`` mesh axis: local
+    gradients encode to residue channels, the WHOLE pytree all-reduces in a
+    single bucketed per-channel int32 psum (``tree_pack``), and the fused
+    decode runs inside ``adamw_update`` at the optimizer boundary — the
+    paper's exact, order-independent aggregation on the real hot path
+    (DESIGN.md §9).  Loss metrics are pmean'd over the same axis."""
     loss_fn = make_loss_fn(cfg)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
@@ -85,7 +94,25 @@ def make_train_step(
             grads = pin(jax.tree_util.tree_map(lambda g: g * inv, grads))
             loss, ce, aux = loss * inv, ce * inv, aux * inv
 
-        params, opt_state, gnorm = adamw_update(opt_cfg, params, grads, opt_state)
+        if rns_codec is None:
+            params, opt_state, gnorm = adamw_update(
+                opt_cfg, params, grads, opt_state
+            )
+        else:
+            from repro.dist.grad_codec import tree_decode, tree_pack
+
+            buf, meta = tree_pack(rns_codec, grads)
+            summed = jax.lax.psum(buf, rns_axis)  # the ONLY grad collective
+            nd = jax.lax.psum(1.0, rns_axis)      # trace-time constant
+            params, opt_state, gnorm = adamw_update(
+                opt_cfg, params, summed, opt_state,
+                grad_decode=lambda s: tree_decode(
+                    rns_codec, s, meta, denom=nd
+                ),
+            )
+            loss, ce, aux = (
+                jax.lax.pmean(x, rns_axis) for x in (loss, ce, aux)
+            )
         metrics = {"loss": loss, "ce": ce, "aux": aux, "gnorm": gnorm}
         return params, opt_state, metrics
 

@@ -143,7 +143,9 @@ def test_codec_decode_kernel_matches_oracle():
     want = np.asarray(codec.decode(codec.fold(summed)))
     got = np.asarray(codec_decode_op(codec, summed, block_b=128,
                                      interpret=True))
-    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    # the compensated limb sum makes the fused decode correctly rounded —
+    # bitwise equal to the jnp f64 path, not merely close
+    np.testing.assert_array_equal(got, want)
 
 
 def test_codec_decode_kernel_extreme_values():
@@ -163,4 +165,23 @@ def test_codec_decode_kernel_extreme_values():
                               xa[..., None].astype(jnp.int32)], axis=-1)
     want = np.asarray(codec.decode(codec.fold(summed)))
     got = np.asarray(codec_decode_op(codec, summed, block_b=8, interpret=True))
-    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_codec_encode_kernel_property(data):
+    """Property: fused encode == jnp f64 encode BITWISE for arbitrary f32
+    inputs (quantize, clip at qmax, signed embedding, redundant channel)."""
+    from repro.dist.grad_codec import GradCodec
+    from repro.kernels import codec_encode_op
+
+    codec = GradCodec.make(world=data.draw(st.sampled_from([2, 32, 512])))
+    vals = data.draw(st.lists(
+        st.floats(-1e30, 1e30, width=32), min_size=1, max_size=64,
+    ))
+    g = jnp.asarray(np.asarray(vals, np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(codec_encode_op(codec, g, block_b=32, interpret=True)),
+        np.asarray(codec.encode(g)),
+    )
