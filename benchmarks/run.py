@@ -12,6 +12,7 @@ additionally writes the same rows as machine-readable JSON (default
   compare_kernel       fused Pallas Alg.1 (interpret) vs unfused reference
   extension_methods    exactness + timing of MRC / Shenoy / Kawamura
   grad_codec           wire bytes + encode/allreduce/decode cost vs fp32
+  codec_correct        RRNS detect vs locate-and-correct cost + wire tax
   division_scaling     comparison-driven divmod / scaling costs
 """
 from __future__ import annotations
@@ -312,6 +313,42 @@ def grad_codec_allreduce():
              f"collectives=1,fused_speedup={t_tree_u/t_tree:.2f}")
 
 
+# ------------------------------------------------------------ codec correct
+def codec_correct():
+    """RRNS error handling on the wire buffer (DESIGN.md §10): the detect
+    check (verify_packed, one MRC) vs the full locate-and-correct scan
+    (n_channels survivor MRCs), and the wire tax of the second redundant
+    channel.  Corruption is injected in ~1/1024 elements — repair must fix
+    exactly those and leave the rest bitwise untouched."""
+    codec = GradCodec.make(world=8, correct=True)
+    rng = np.random.default_rng(8)
+    B = min(ALLREDUCE_SIZES[-1], 1 << 14)
+    g = jnp.asarray(rng.standard_normal(B).astype(np.float32))
+    buf = codec.encode(g).astype(jnp.int32)
+    m0 = int(codec.base.moduli[0])
+    hits = rng.random(B) < 1.0 / 1024
+    bad = jnp.where(
+        jnp.asarray(hits)[:, None]
+        & (jnp.arange(codec.n_channels) == 0),
+        jnp.mod(buf + 7, m0), buf,
+    )
+    f_verify = jax.jit(lambda p: codec.verify_packed(p))
+    f_correct = jax.jit(lambda p: codec.correct_packed(p))
+    fixed, fault = f_correct(bad)
+    n_fix = int(jnp.sum(fault >= 0))
+    ok = bool(jnp.all(fixed == buf)) and n_fix == int(hits.sum())
+    t_v = _time(f_verify, bad, iters=10)
+    t_c = _time(f_correct, bad, iters=10)
+    wire = codec.n_channels * 16  # int16-lane residues on the wire
+    base_wire = (codec.base.n + 1) * 16
+    emit("codec_verify_detect", t_v, f"elts={B}")
+    emit("codec_locate_correct", t_c,
+         f"vs_detect_x={t_c/t_v:.2f},repaired={n_fix},exact={ok}")
+    emit("codec_correct_wire_bits", 0,
+         f"per_elt={wire},vs_detect_only={wire/base_wire:.2f}x")
+    assert ok, "RRNS repair must restore the corrupted buffer bitwise"
+
+
 # --------------------------------------------------------- division/scaling
 def division_scaling():
     base = make_base(4, bits=8)
@@ -339,6 +376,7 @@ TABLES = [
     extension_methods,
     grad_codec,
     grad_codec_allreduce,
+    codec_correct,
     division_scaling,
 ]
 

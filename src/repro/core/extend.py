@@ -24,7 +24,20 @@ __all__ = ["extend_mrc", "extend_shenoy", "extend_kawamura"]
 
 
 def extend_mrc(base: RNSBase, x, targets: tuple[int, ...]):
-    """Exact extension of ``x: (..., n)`` to residues mod each target, (..., T)."""
+    """Exact extension of ``x: (..., n)`` to residues mod each target, (..., T).
+
+    This is also the reconstruction step of the RRNS single-fault repair
+    (DESIGN.md §10): the corrected residue of a located channel is the
+    surviving channels' value extended back to that channel's modulus.
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core.base import RNSBase
+    >>> from repro.core.extend import extend_mrc
+    >>> base = RNSBase(moduli=(3, 5, 7), ma=11, bits=15)
+    >>> x = jnp.asarray([[52 % 3, 52 % 5, 52 % 7]])
+    >>> extend_mrc(base, x, (11, 13)).tolist()       # 52 mod 11, 52 mod 13
+    [[8, 0]]
+    """
     return mrs_dot_mod(base, mrc(base, x), targets)
 
 
@@ -40,6 +53,15 @@ def extend_shenoy(base: RNSBase, x, xr, mr: int, targets: tuple[int, ...]):
 
     Y = sum xi_i M_i = X + k M with 0 <= k < n, so k is recovered mod m_r
     (requires m_r > n) and subtracted off in each target channel.
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core.base import RNSBase
+    >>> from repro.core.extend import extend_shenoy
+    >>> base = RNSBase(moduli=(3, 5, 7), ma=11, bits=15)
+    >>> x = jnp.asarray([[52 % 3, 52 % 5, 52 % 7]])
+    >>> xr = jnp.asarray([52 % 11])                  # TRUE redundant residue
+    >>> extend_shenoy(base, x, xr, 11, (13,)).tolist()
+    [[0]]
     """
     if mr <= base.n:
         raise ValueError("Shenoy extension needs m_r > n")

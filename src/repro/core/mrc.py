@@ -25,7 +25,20 @@ __all__ = ["mrc", "mrs_ge", "mrs_to_int", "mrc_unrolled"]
 def mrc(base: RNSBase, x):
     """Mixed-radix digits of a batched residue tensor ``x: (..., n)``.
 
-    Returns digits ``(..., n)`` with 0 <= a_i < m_i.
+    Returns digits ``(..., n)`` with 0 <= a_i < m_i.  Layout is leaf-major
+    (channels on the LAST axis), matching all of ``repro.core``; the Pallas
+    kernels use the transposed channel-major tiles (see kernels/ops.py).
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core.base import RNSBase
+    >>> from repro.core.mrc import mrc, mrs_to_int
+    >>> base = RNSBase(moduli=(3, 5, 7), ma=11, bits=15)
+    >>> x = jnp.asarray([[52 % 3, 52 % 5, 52 % 7]])  # residues of X = 52
+    >>> digits = mrc(base, x)
+    >>> digits.tolist()                              # 52 = 1 + 2*3 + 3*15
+    [[1, 2, 3]]
+    >>> mrs_to_int(base, digits[0])
+    52
     """
     m = jnp.asarray(base.moduli_np, dtype=x.dtype)
     inv = jnp.asarray(base.inv_tri_np, dtype=x.dtype)  # inv[j, i] = m_j^{-1} mod m_i
@@ -45,7 +58,16 @@ def mrc(base: RNSBase, x):
 
 def mrc_unrolled(base: RNSBase, x):
     """Unrolled variant (identical math).  Better for tiny n where the
-    fori_loop's dynamic slicing dominates; used by the gradient codec."""
+    fori_loop's dynamic slicing dominates; used by the gradient codec.
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core.base import RNSBase
+    >>> from repro.core.mrc import mrc, mrc_unrolled
+    >>> base = RNSBase(moduli=(3, 5, 7), ma=11, bits=15)
+    >>> x = jnp.asarray([[1, 2, 3], [0, 4, 6]])
+    >>> bool((mrc_unrolled(base, x) == mrc(base, x)).all())
+    True
+    """
     m = jnp.asarray(base.moduli_np, dtype=x.dtype)
     inv = base.inv_tri_np
     n = base.n
@@ -65,7 +87,15 @@ def mrs_ge(d1, d2):
 
     MRS is positional with a_n most significant, so compare at the most
     significant differing digit.  This is the digit-compare step of the
-    classical (Szabo–Tanaka / Flores) method — our baseline.
+    classical (Szabo–Tanaka / Flores) method — our baseline (and the
+    range test of the RRNS fault locator, DESIGN.md §10).
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core.mrc import mrs_ge
+    >>> d52 = jnp.asarray([1, 2, 3])   # digits of 52 in base (3, 5, 7)
+    >>> d51 = jnp.asarray([0, 2, 3])   # digits of 51
+    >>> bool(mrs_ge(d52, d51)), bool(mrs_ge(d51, d52))
+    (True, False)
     """
     neq = d1 != d2
     n = d1.shape[-1]

@@ -4,17 +4,20 @@ codec, and checkpoint fault detection (DESIGN.md §8).
 Modules:
     act_sharding  logical-axis activation constraints (no-ops off-mesh)
     sharding      PartitionSpec trees for params / optimizer / batch / cache
-    grad_codec    exact RNS gradient all-reduce with the redundant channel
-    fault         tensor fingerprints + elastic checkpoint discovery
+    grad_codec    exact RNS gradient all-reduce with redundant channels
+                  (detect with one, locate-and-correct with two)
+    fault         tensor fingerprints + elastic checkpoint discovery +
+                  in-place RRNS buffer repair
 """
 from .act_sharding import constrain, current_mesh, use_mesh  # noqa: F401
 from .fault import (  # noqa: F401
     find_restorable,
+    repair_packed,
     tensor_fingerprint,
     tree_fingerprints,
     verify_fingerprints,
 )
-from .grad_codec import GradCodec, rns_psum  # noqa: F401
+from .grad_codec import GradCodec, rns_psum, rns_psum_tree  # noqa: F401
 from .sharding import (  # noqa: F401
     batch_specs,
     cache_specs,

@@ -1,4 +1,4 @@
-"""Fault detection for checkpoints and host-side tensor transport.
+"""Fault detection and repair for checkpoints and tensor transport.
 
 Content fingerprints (sha256 over dtype/shape/bytes) catch single-bit flips
 in saved or relayed tensors; ``find_restorable`` walks a checkpoint
@@ -6,6 +6,12 @@ directory newest-first and returns the first step whose manifest AND tensor
 contents verify — torn saves (no manifest after the atomic-rename protocol
 in train/checkpoint.py) and corrupt steps are skipped, which is what makes
 resume elastic to mid-save crashes (DESIGN.md §8).
+
+``repair_packed`` is the finer-grained companion for RNS-codec state: where
+a fingerprint mismatch can only trigger a rollback to the previous verified
+checkpoint, a codec built with ``GradCodec.make(correct=True)`` carries two
+redundant residue channels, so a single corrupted channel per element is
+located and CORRECTED in place (DESIGN.md §10) and the step keeps going.
 """
 from __future__ import annotations
 
@@ -14,6 +20,7 @@ import json
 import os
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
@@ -24,7 +31,34 @@ __all__ = [
     "load_verified",
     "scan_restorable",
     "find_restorable",
+    "repair_packed",
 ]
+
+
+def repair_packed(codec, packed, *, wraps: int = 0,
+                  channel_major: bool = False):
+    """Locate-and-correct a packed RNS codec buffer (wire or checkpoint).
+
+    ``packed`` is leaf-major ``(..., n_channels)`` by default or the wire's
+    channel-major ``(n_channels, B)`` with ``channel_major=True``; ``wraps``
+    is 0 for fresh encodings / normalized sums / checkpointed codec state
+    and ``world - 1`` for a raw post-psum buffer (see
+    ``GradCodec.locate_fault``).
+
+    Returns ``(repaired, report)`` where ``report`` is a host-side dict:
+    ``repaired`` counts elements whose single bad channel was rebuilt from
+    the survivors, ``unrecoverable`` counts elements with multi-channel
+    corruption (left untouched — those still need the ``find_restorable``
+    rollback path).  A clean buffer returns bitwise-unchanged with both
+    counts zero.
+    """
+    buf = packed.T if channel_major else packed
+    fixed, fault = codec.correct_packed(buf, wraps=wraps)
+    report = {
+        "repaired": int(jnp.sum(fault >= 0)),
+        "unrecoverable": int(jnp.sum(fault == -2)),
+    }
+    return (fixed.T if channel_major else fixed), report
 
 
 def tensor_fingerprint(arr) -> str:

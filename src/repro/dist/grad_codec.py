@@ -11,18 +11,30 @@ all-reduce.
 
 The redundant channel rides along through every ring op, so sign tests,
 magnitude clips, and consistency checks are single Algorithm-1 comparisons
-(``compare_packed_ge``) — no reconstruction (DESIGN.md §4, §8).
+(``compare_packed_ge``) — no reconstruction (DESIGN.md §4, §8).  With a
+SECOND redundant modulus (``make(correct=True)``) the code becomes a
+Redundant RNS that can *locate and correct* any single corrupted channel,
+not just detect it: ``locate_fault`` / ``correct_packed`` (DESIGN.md §10).
 
 Dynamic range budget (defaults): n=3 moduli of 15 bits gives M ~ 2**45;
 ``qmax = (M-1) // (2*world)`` guarantees ``world`` summed replicas stay
 inside the signed embedding, so the decode is exact and the fused Pallas
 kernels' 3-limb arithmetic (kernels/codec_{encode,decode}.py) applies.
 
+Layouts — two appear throughout this module and the kernels:
+
+* **leaf-major** ``(..., n_channels)``: channels last, one packed vector per
+  gradient element.  The algebraic API (``fold``/``normalize``/``decode``/
+  ``verify_packed``/``locate_fault``) speaks this layout.
+* **channel-major** ``(n_channels, B)``: one contiguous row per channel —
+  the kernels' native tile layout and the wire format of the bucketed
+  transport (each row all-reduces as an independent int32 stream).
+
 Transport comes in two granularities (DESIGN.md §9):
 
 * ``rns_psum``     — one tensor, one per-channel psum (the original path).
 * ``rns_psum_tree``— the WHOLE grad pytree flattened into one contiguous
-  (n+1, B_total) int32 buffer, moved in a single per-channel psum
+  channel-major int32 buffer, moved in a single per-channel psum
   (NCCL-style bucketing) and unflattened after the fused decode.  One
   collective per step instead of one per leaf.
 
@@ -30,48 +42,120 @@ Both dispatch encode/decode to the fused Pallas kernels when the codec's
 ``fused`` knob is on and the base qualifies (bits <= 15 and M < 2**45 —
 the 3x15-bit limb discipline); otherwise they fall back to the exact jnp
 path automatically.
+
+Doctest tour (see individual methods for details)::
+
+    >>> import jax.numpy as jnp
+    >>> from repro.dist.grad_codec import GradCodec
+    >>> codec = GradCodec.make(world=2)          # 3 base channels + m_a
+    >>> codec.n_channels
+    4
+    >>> packed = codec.encode(jnp.asarray([1.5, -0.25]))   # leaf-major
+    >>> packed.shape
+    (2, 4)
+    >>> codec.decode(codec.fold(packed)).tolist()
+    [1.5, -0.25]
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.base import RNSBase, make_base
+from repro.core.base import RNSBase, gen_coprime_moduli, make_base
 from repro.core.compare import compare_packed_ge
-from repro.core.convert import rns_to_tensor, to_ma
-from repro.core.mrc import mrc_unrolled
+from repro.core.convert import mrs_dot_mod, rns_to_tensor
+from repro.core.mrc import mrc_unrolled, mrs_ge
 from repro.core.signed import abs_ge_threshold, encode_signed, is_negative
 
 __all__ = ["GradCodec", "rns_psum", "rns_psum_tree", "tree_pack",
            "tree_decode"]
 
 
+@functools.lru_cache(maxsize=None)
+def _survivor_tables(moduli: tuple, redundant: tuple, bits: int, wraps: int):
+    """Static per-candidate-channel tables for RRNS fault location.
+
+    For each channel c of the (base + redundant) set, build the *survivor*
+    base (every modulus except m_c, with m_c as its Alg.-3 target) and the
+    mixed-radix digits of the legitimate bound R = (wraps+1)*M in that base.
+    A reconstruction-excluding-c lands below R iff c is consistent with the
+    survivors — the locate test of DESIGN.md §10.
+    """
+    chans = tuple(moduli) + tuple(redundant)
+    M = math.prod(moduli)
+    R = (wraps + 1) * M
+    tables = []
+    for c, mc in enumerate(chans):
+        surv = tuple(m for i, m in enumerate(chans) if i != c)
+        if R >= math.prod(surv):
+            raise ValueError(
+                f"RRNS locate: legitimate range (wraps+1)*M = {R} does not "
+                f"fit the survivor product of channel {c}; lower wraps "
+                f"(usually world-1) or widen the redundant moduli"
+            )
+        sb = RNSBase(moduli=surv, ma=mc, bits=bits)
+        digits, x = [], R
+        for m in surv:
+            digits.append(x % m)
+            x //= m
+        tables.append((sb, tuple(digits)))
+    return tuple(tables)
+
+
 @dataclasses.dataclass(frozen=True)
 class GradCodec:
-    """Static codec configuration; hashable, closed over by jitted steps."""
+    """Static codec configuration; hashable, closed over by jitted steps.
+
+    ``mb`` is the optional SECOND redundant modulus (``make(correct=True)``):
+    with it, the packed layout grows to ``(..., n+2)`` and the codec can
+    locate-and-correct a single corrupted channel (``correct_packed``), not
+    just detect one (``verify_packed``).
+    """
 
     base: RNSBase
     frac_bits: int
     world: int
     fused: bool = True
+    mb: int | None = None
 
     @classmethod
     def make(cls, *, world: int, n: int = 3, bits: int = 15,
-             frac_bits: int = 16, fused: bool = True) -> "GradCodec":
+             frac_bits: int = 16, fused: bool = True,
+             correct: bool = False) -> "GradCodec":
         """Codec sized for ``world`` replicas: per-replica magnitudes up to
         ``qmax`` sum without leaving the signed range (-M/2, M/2).
 
         ``fused`` enables the Pallas encode/decode kernels on the transport
         path when the base qualifies (see ``use_fused``); the jnp path is
         always available and bitwise identical.
+
+        ``correct=True`` adds the second redundant modulus ``m_b``.  The
+        redundant pair is then the TWO LARGEST primes of the generated set
+        (base moduli the next n down): the locate test's exactness needs
+        ``m_a * m_b > m_c * m_e`` for every pair of surviving channels
+        (DESIGN.md §10), which "redundant = largest" guarantees.
+
+        >>> GradCodec.make(world=2).n_channels          # detect-only
+        4
+        >>> rrns = GradCodec.make(world=2, correct=True)
+        >>> rrns.n_channels, rrns.mb is not None        # locate-and-correct
+        (5, True)
         """
         if world < 1:
             raise ValueError("world must be >= 1")
-        base = make_base(n, bits=bits)
-        codec = cls(base=base, frac_bits=frac_bits, world=world, fused=fused)
+        mb = None
+        if correct:
+            ms = gen_coprime_moduli(n + 2, bits=bits)  # descending primes
+            base = RNSBase(moduli=tuple(ms[2:]), ma=ms[0], bits=bits)
+            mb = ms[1]
+        else:
+            base = make_base(n, bits=bits)
+        codec = cls(base=base, frac_bits=frac_bits, world=world, fused=fused,
+                    mb=mb)
         if codec.qmax < 1:
             raise ValueError(
                 f"world={world} leaves no dynamic range for base M={base.M}"
@@ -79,11 +163,28 @@ class GradCodec:
         return codec
 
     @property
+    def redundant(self) -> tuple[int, ...]:
+        """The redundant moduli, in channel order: (m_a,) or (m_a, m_b)."""
+        return (self.base.ma,) if self.mb is None else (self.base.ma, self.mb)
+
+    @property
+    def n_channels(self) -> int:
+        """Total packed channels: n base + 1 or 2 redundant."""
+        return self.base.n + len(self.redundant)
+
+    @property
     def use_fused(self) -> bool:
         """True when transport runs the fused Pallas kernels: the knob is on
         AND the base fits the kernels' limb discipline (15-bit int32 lanes,
         M < 2**45 for the 3x15-bit Horner).  Wider bases silently take the
-        exact jnp path — same bits on the wire, more HBM round-trips."""
+        exact jnp path — same bits on the wire, more HBM round-trips.
+
+        >>> from repro.dist.grad_codec import GradCodec
+        >>> GradCodec.make(world=2).use_fused        # 3x15-bit: kernels on
+        True
+        >>> GradCodec.make(world=2, n=4).use_fused   # M ~ 2**60: jnp path
+        False
+        """
         return (
             self.fused and self.base.bits <= 15 and self.base.M < (1 << 45)
         )
@@ -100,7 +201,8 @@ class GradCodec:
 
     # ----------------------------------------------------------- transport
     def encode(self, g):
-        """fp32 tensor (...,) -> packed int32 residue tensor (..., n+1).
+        """fp32 tensor (...,) -> packed int32 residue tensor, leaf-major
+        ``(..., n_channels)``.
 
         Quantization happens in f64 so the clip at ``qmax`` (~2**35 for
         world=512) is exact; the residues themselves are exact integer
@@ -108,6 +210,12 @@ class GradCodec:
         enables it) — without it jax silently degrades f64 to f32 and the
         clip/residues go wrong, so refuse loudly.  The fused kernel path
         (``encode_packed`` with ``use_fused``) has no such dependency.
+
+        >>> import jax.numpy as jnp
+        >>> from repro.dist.grad_codec import GradCodec
+        >>> codec = GradCodec.make(world=2)
+        >>> codec.encode(jnp.asarray([0.5])).shape    # needs x64: see above
+        (1, 4)
         """
         if not jax.config.jax_enable_x64:
             raise RuntimeError(
@@ -119,14 +227,35 @@ class GradCodec:
             jnp.round(g.astype(jnp.float64) * (1 << self.frac_bits)),
             -float(self.qmax), float(self.qmax),
         ).astype(jnp.int64)
-        return encode_signed(self.base, q)
+        packed = encode_signed(self.base, q)
+        if self.mb is None:
+            return packed
+        # second redundant channel: (q mod M) mod m_b, same signed shift
+        xb = jnp.mod(q, self.mb)
+        xb = jnp.where(
+            q < 0, jnp.mod(xb + self.base.M % self.mb, self.mb), xb
+        )
+        return jnp.concatenate(
+            [packed, xb[..., None].astype(packed.dtype)], axis=-1
+        )
 
     def encode_packed(self, g, *, channel_major: bool = False):
         """Transport-path encode: the fused Pallas kernel when ``use_fused``
         else the jnp path — bitwise-identical residues either way.
 
-        channel_major=True returns the kernel-native (n+1, B) layout for a
-        flat (B,) input (the bucketed pipeline's wire format)."""
+        ``channel_major=True`` returns the kernel-native ``(n_channels, B)``
+        layout for a flat ``(B,)`` input (the bucketed pipeline's wire
+        format); the default is leaf-major ``(..., n_channels)``.
+
+        >>> import jax.numpy as jnp
+        >>> from repro.dist.grad_codec import GradCodec
+        >>> codec = GradCodec.make(world=2)
+        >>> codec.encode_packed(jnp.ones((2, 3))).shape       # leaf-major
+        (2, 3, 4)
+        >>> codec.encode_packed(jnp.ones((6,)),
+        ...                     channel_major=True).shape     # wire layout
+        (4, 6)
+        """
         if self.use_fused:
             from repro.kernels import codec_encode_op
 
@@ -151,13 +280,13 @@ class GradCodec:
     def fold(self, summed):
         """Reduce per-channel sums back into canonical residues (< m_i)."""
         m = jnp.asarray(
-            tuple(self.base.moduli) + (self.base.ma,), dtype=summed.dtype
+            tuple(self.base.moduli) + self.redundant, dtype=summed.dtype
         )
         return jnp.mod(summed, m)
 
     def decode(self, folded):
         """Folded packed tensor -> f32 values (exact up to the f32 cast)."""
-        v = rns_to_tensor(self.base, folded[..., :-1])
+        v = rns_to_tensor(self.base, folded[..., : self.base.n])
         half = (self.base.M + 1) // 2
         v = jnp.where(v >= half, v - self.base.M, v)
         return (v.astype(jnp.float64) * (2.0 ** -self.frac_bits)).astype(
@@ -165,54 +294,175 @@ class GradCodec:
         )
 
     # ------------------------------------------- Algorithm-1 ring queries
+    def _alg1_view(self, folded):
+        """The (..., n+1) slice Algorithm-1 queries consume: base residues
+        plus the m_a channel (the m_b channel, when present, is correction
+        metadata and plays no part in comparisons)."""
+        return folded[..., : self.base.n + 1]
+
     def is_negative(self, folded):
         """Sign test without reconstruction: one Alg.-1 comparison.
 
         Requires a CONSISTENT redundant channel (fresh encodings are; sums of
         W > 1 replicas need ``normalize`` first — the summed embeddings wrap
         mod M while the carried m_a channel does not)."""
-        return is_negative(self.base, folded)
+        return is_negative(self.base, self._alg1_view(folded))
 
     def abs_ge(self, folded, thr: int):
         """|value| >= thr (in quantized units): two Alg.-1 comparisons.
         Same consistency requirement as ``is_negative``."""
-        return abs_ge_threshold(self.base, folded, int(thr))
+        return abs_ge_threshold(self.base, self._alg1_view(folded), int(thr))
 
     def normalize(self, folded):
-        """Rebuild a consistent redundant channel from the base residues
-        (one MRC + one Alg.-3 dot — the cost of a single comparison).
-        Identity on fresh encodings; after a W-replica psum it re-anchors
-        m_a to the wrapped value so Alg.-1 queries apply to the sum."""
-        x = folded[..., :-1]
-        xa = to_ma(self.base, mrc_unrolled(self.base, x))
-        return jnp.concatenate([x, xa[..., None].astype(x.dtype)], axis=-1)
+        """Rebuild consistent redundant channels from the base residues
+        (one MRC + one Alg.-3 dot per redundant channel — the cost of a
+        comparison).  Identity on fresh encodings; after a W-replica psum it
+        re-anchors m_a (and m_b) to the wrapped value so Alg.-1 queries
+        apply to the sum.
+
+        NOTE: normalize overwrites the redundant channels from the base
+        residues, so it forfeits their error-detection/correction power —
+        run ``verify_packed`` / ``correct_packed`` BEFORE normalizing."""
+        x = folded[..., : self.base.n]
+        digits = mrc_unrolled(self.base, x)
+        xr = mrs_dot_mod(self.base, digits, self.redundant)
+        return jnp.concatenate([x, xr.astype(x.dtype)], axis=-1)
 
     def verify_packed(self, folded):
         """Redundant-channel consistency check (transit corruption detector).
 
-        Each replica encodes with a consistent channel, so after summing W
-        replicas ``carried - recomputed`` must equal ``k * (M mod m_a)`` mod
-        m_a where k < W counts the embeddings' wraps mod M.  Any other offset
+        Each replica encodes with consistent channels, so after summing W
+        replicas ``carried - recomputed`` must equal ``k * (M mod m_r)`` mod
+        m_r where k < W counts the embeddings' wraps mod M.  Any other offset
         means a channel was corrupted in transit — the codec-level analogue
         of dist/fault fingerprints, at one MRC per element.
+
+        With the second redundant modulus the check sharpens: both channels
+        must recover the SAME wrap count k, so corruption of either
+        redundant channel is always caught (the other still holds the true
+        k), and base-channel corruption must fool two independent moduli at
+        once to slip through.
 
         Discriminating power requires ``world < m_a``: with more replicas
         than residues the offset family covers the whole group and every
         channel value is accepted (the check degenerates to always-True)."""
-        x, xa = folded[..., :-1], folded[..., -1]
-        recomputed = to_ma(self.base, mrc_unrolled(self.base, x))
-        delta = jnp.mod(
-            xa.astype(jnp.int64) - recomputed.astype(jnp.int64), self.base.ma
+        x = folded[..., : self.base.n]
+        digits = mrc_unrolled(self.base, x)
+        recomputed = mrs_dot_mod(self.base, digits, self.redundant)
+
+        def wrap_count(carried, rec, mr: int):
+            delta = jnp.mod(
+                carried.astype(jnp.int64) - rec.astype(jnp.int64), mr
+            )
+            # gcd(M, m_r) = 1, so the wrap count is recoverable in O(1):
+            # k = delta * (M mod m_r)^{-1} mod m_r, valid iff k <= world
+            inv = pow(self.base.M % mr, -1, mr)
+            return jnp.mod(delta * inv, mr)
+
+        ka = wrap_count(folded[..., self.base.n], recomputed[..., 0],
+                        self.base.ma)
+        ok = ka <= min(self.world, self.base.ma - 1)
+        if self.mb is not None:
+            kb = wrap_count(folded[..., self.base.n + 1],
+                            recomputed[..., 1], self.mb)
+            ok = ok & (kb <= min(self.world, self.mb - 1)) & (ka == kb)
+        return ok
+
+    # ------------------------------------------- RRNS locate-and-correct
+    def _fault_scan(self, folded, wraps: int):
+        """Per-channel (consistent?, corrected-residue) candidates.
+
+        For each channel c: MRC over the n+1 SURVIVING channels, compare the
+        reconstruction against R = (wraps+1)*M in mixed radix (int32-safe
+        lexicographic compare — no big-int arithmetic on device), and keep
+        the Alg.-3 extension of the reconstruction back to m_c as the
+        replacement residue should c turn out to be the faulty one.
+        """
+        if self.mb is None:
+            raise ValueError(
+                "fault location needs the second redundant modulus: build "
+                "the codec with GradCodec.make(correct=True)"
+            )
+        tables = _survivor_tables(
+            self.base.moduli, self.redundant, self.base.bits, int(wraps)
         )
-        # gcd(M, m_a) = 1, so the wrap count is recoverable in O(1):
-        # k = delta * (M mod m_a)^{-1} mod m_a, valid iff k <= world
-        inv = pow(self.base.M_mod_ma, -1, self.base.ma)
-        k = jnp.mod(delta * inv, self.base.ma)
-        return k <= min(self.world, self.base.ma - 1)
+        chans = tuple(self.base.moduli) + self.redundant
+        oks, fixes = [], []
+        for c, (sb, r_digits) in enumerate(tables):
+            xs = jnp.concatenate(
+                [folded[..., :c], folded[..., c + 1:]], axis=-1
+            )
+            d = mrc_unrolled(sb, xs)
+            bound = jnp.broadcast_to(
+                jnp.asarray(r_digits, dtype=d.dtype), d.shape
+            )
+            oks.append(~mrs_ge(d, bound))  # reconstruction-sans-c < R
+            fixes.append(mrs_dot_mod(sb, d, (chans[c],))[..., 0])
+        return jnp.stack(oks, axis=-1), jnp.stack(fixes, axis=-1)
+
+    def _verdict(self, ok):
+        """Per-element fault verdict from the exclusion flags: -1 clean
+        (every exclusion lands in range), channel index on a unique hit,
+        -2 uncorrectable otherwise.  Shared by locate_fault/correct_packed
+        so the two can never disagree on the same buffer."""
+        cnt = jnp.sum(ok, axis=-1)
+        return jnp.where(
+            cnt == self.n_channels,
+            jnp.int32(-1),
+            jnp.where(cnt == 1, jnp.argmax(ok, axis=-1).astype(jnp.int32),
+                      jnp.int32(-2)),
+        )
+
+    def locate_fault(self, folded, *, wraps: int = 0):
+        """Locate a single corrupted channel per element: int32 tensor over
+        ``folded.shape[:-1]`` holding the channel index in [0, n_channels),
+        ``-1`` for a clean codeword, or ``-2`` for an uncorrectable one
+        (more than one channel corrupted, or location ambiguous).
+
+        ``wraps`` bounds the legitimate value range at (wraps+1)*M: 0 for
+        fresh encodings, normalized sums, and checkpointed codec state;
+        ``world - 1`` for a raw post-psum buffer (whose channel sums
+        represent an integer below world*M).  Location is EXACT at wraps=0
+        (DESIGN.md §10); at wraps>0 a corruption can occasionally look
+        consistent with more than one channel, which reports -2 (refuse)
+        rather than ever miscorrecting silently.
+
+        >>> import jax.numpy as jnp
+        >>> from repro.dist.grad_codec import GradCodec
+        >>> rrns = GradCodec.make(world=2, correct=True)
+        >>> buf = rrns.encode(jnp.asarray([3.0, -2.0]))
+        >>> bad = buf.at[0, 1].add(5)            # corrupt channel 1, elt 0
+        >>> rrns.locate_fault(bad).tolist()      # elt 1 stays clean
+        [1, -1]
+        """
+        ok, _ = self._fault_scan(folded, wraps)
+        return self._verdict(ok)
+
+    def correct_packed(self, folded, *, wraps: int = 0):
+        """Locate-and-correct: returns ``(corrected, fault)`` where
+        ``fault`` is ``locate_fault``'s verdict and ``corrected`` equals
+        ``folded`` with each single-fault element's bad channel rebuilt by
+        base extension from the n+1 surviving channels (clean and
+        uncorrectable elements pass through untouched).
+
+        >>> import jax.numpy as jnp
+        >>> from repro.dist.grad_codec import GradCodec
+        >>> rrns = GradCodec.make(world=2, correct=True)
+        >>> buf = rrns.encode(jnp.asarray([3.0, -2.0]))
+        >>> fixed, fault = rrns.correct_packed(buf.at[0, 1].add(5))
+        >>> bool(jnp.all(fixed == buf))
+        True
+        """
+        ok, fixes = self._fault_scan(folded, wraps)
+        fault = self._verdict(ok)
+        hit = fault[..., None] == jnp.arange(self.n_channels, dtype=jnp.int32)
+        return jnp.where(hit, fixes.astype(folded.dtype), folded), fault
 
     def range_ok(self, p1, p2):
         """Packed-ge usable as an overflow guard: (p1 >= p2) per Alg. 1."""
-        return compare_packed_ge(self.base, p1, p2)
+        return compare_packed_ge(
+            self.base, self._alg1_view(p1), self._alg1_view(p2)
+        )
 
 
 def rns_psum(codec: GradCodec, g, axis_name: str):
@@ -245,8 +495,9 @@ class _TreeMeta:
 
 
 def tree_pack(codec: GradCodec, grads):
-    """Flatten a grad pytree into ONE contiguous (n+1, B_total) int32 wire
-    buffer (encode fused when the codec qualifies).
+    """Flatten a grad pytree into ONE contiguous channel-major
+    ``(n_channels, B_total)`` int32 wire buffer (encode fused when the codec
+    qualifies).
 
     Returns ``(buf, meta)``; ``meta`` is static trace-time layout info for
     ``tree_decode``.  This is the NCCL-style bucketing move: the whole tree
@@ -266,7 +517,8 @@ def tree_pack(codec: GradCodec, grads):
 
 
 def tree_decode(codec: GradCodec, summed, meta: _TreeMeta, denom=1.0):
-    """Post-psum (n+1, B_total) channel sums -> grad pytree / ``denom``.
+    """Post-psum channel-major ``(n_channels, B_total)`` sums -> grad pytree
+    / ``denom``.
 
     Decode runs fused (one HBM round-trip) when the codec qualifies; the
     flat result is sliced back into leaves with ``meta``'s layout and cast
@@ -283,7 +535,7 @@ def tree_decode(codec: GradCodec, summed, meta: _TreeMeta, denom=1.0):
 def rns_psum_tree(codec: GradCodec, grads, axis_name: str):
     """Exact mean-gradient all-reduce of an ENTIRE pytree in one collective.
 
-    tree_pack -> one per-channel int32 psum over the (n+1, B_total) bucket
+    tree_pack -> one per-channel int32 psum over the channel-major bucket
     -> fused decode -> unflatten.  Exactness is per element, so bucketing
     changes nothing semantically — it only amortizes collective latency
     that the per-leaf path pays once per tensor.

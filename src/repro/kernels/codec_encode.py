@@ -1,15 +1,17 @@
 """Pallas TPU kernel: FUSED gradient-codec encode (the transport hot path).
 
-Per (n+1, BLOCK_B) tile this kernel fuses what the jnp path does in four
-HBM round-trips (f64 upcast, round/clip, per-channel mod, redundant-channel
-fixup) into one pass:
+Per (nch, BLOCK_B) tile — nch = n base channels plus one (detect) or two
+(locate-and-correct) redundant channels — this kernel fuses what the jnp
+path does in four HBM round-trips (f64 upcast, round/clip, per-channel mod,
+redundant-channel fixup) into one pass:
 
     quantize  r = round(g * 2^frac_bits)        (f32, exact — see below)
     split     |r| -> hi*2^15 + lo               (exact power-of-two scales)
     clip      (hi, lo) vs qmax's limbs          (int32 compare/select)
     reduce    |q| mod m_c per channel           (Barrett, 15-bit moduli)
-    embed     negate residues where r < 0; shift the m_a channel by
-              M mod m_a (the signed embedding of core/signed.py)
+    embed     negate residues where r < 0; shift each redundant channel by
+              its M mod m_r offset (the signed embedding of core/signed.py;
+              base channels get offset 0 since m_i | M)
 
 Exactness (all f32/int32, no 64-bit anywhere, bitwise equal to the f64
 jnp path for M < 2^45):
@@ -41,8 +43,8 @@ __all__ = ["codec_encode_kernel_call"]
 _MASK = 0x7FFF
 
 
-def _kernel(g_ref, m_ref, pow15_ref, out_ref, *, n, scale, qh, ql, ma_off):
-    m = m_ref[...]                                  # (n+1, 1) moduli + m_a
+def _kernel(g_ref, m_ref, pow15_ref, off_ref, out_ref, *, scale, qh, ql):
+    m = m_ref[...]                             # (nch, 1) base + redundant
     recip = 1.0 / m.astype(jnp.float32)
 
     r = jnp.round(g_ref[...] * jnp.float32(scale))  # (1, B) exact integer
@@ -60,46 +62,50 @@ def _kernel(g_ref, m_ref, pow15_ref, out_ref, *, n, scale, qh, ql, ma_off):
 
     # |q| mod m_c = ((hi mod m_c) * (2^15 mod m_c) + lo) mod m_c, broadcast
     # over the channel axis; every Barrett operand stays below 2^30.
-    r_hi = barrett_mod(hi, m, recip)                # (n+1, B)
+    r_hi = barrett_mod(hi, m, recip)                # (nch, B)
     r_abs = barrett_mod(r_hi * pow15_ref[...] + lo, m, recip)
 
     # signed embedding: (-|q|) mod m = m - (|q| mod m), except when 0
     res = jnp.where(neg & (r_abs > 0), m - r_abs, jnp.where(neg, 0, r_abs))
 
-    # redundant channel (row n) additionally shifts by M mod m_a when
-    # negative: the channels store q + M, so m_a must track (q + M) mod m_a
-    row = jax.lax.broadcasted_iota(jnp.int32, res.shape, 0)
-    shifted = res + ma_off
+    # redundant rows additionally shift by M mod m_r when negative: the
+    # channels store q + M, so each m_r must track (q + M) mod m_r.  Base
+    # rows carry off = 0 (m_i divides M), so the shift is the identity there.
+    shifted = res + off_ref[...]
     shifted = jnp.where(shifted >= m, shifted - m, shifted)
-    out_ref[...] = jnp.where(neg & (row == n), shifted, res)
+    out_ref[...] = jnp.where(neg, shifted, res)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n", "scale", "qh", "ql", "ma_off", "block_b", "interpret"),
+    static_argnames=("scale", "qh", "ql", "block_b", "interpret"),
 )
 def codec_encode_kernel_call(
-    g_row, m_all, pow15, *, n: int, scale: float, qh: int, ql: int,
-    ma_off: int, block_b: int = 1024, interpret: bool = True,
+    g_row, m_all, pow15, off, *, scale: float, qh: int, ql: int,
+    block_b: int = 1024, interpret: bool = True,
 ):
-    """g_row: (1, B) f32 gradients -> (n+1, B) int32 packed residues.
+    """g_row: (1, B) f32 gradients -> (nch, B) int32 packed residues, where
+    nch = n base + 1 or 2 redundant channels (detect vs locate-and-correct
+    codecs share the kernel).
 
-    qh/ql are qmax's 15-bit limbs (qmax = qh*2^15 + ql < 2^44), ma_off is
-    M mod m_a.  B must be a multiple of block_b (ops.py pads).
+    qh/ql are qmax's 15-bit limbs (qmax = qh*2^15 + ql < 2^44); ``off`` is
+    the per-channel negative-embedding shift column (0 for base rows,
+    M mod m_r for redundant rows).  B must be a multiple of block_b
+    (ops.py pads).
     """
+    nch = m_all.shape[0]
     _, B = g_row.shape
     grid = (B // block_b,)
     return pl.pallas_call(
-        functools.partial(
-            _kernel, n=n, scale=scale, qh=qh, ql=ql, ma_off=ma_off
-        ),
+        functools.partial(_kernel, scale=scale, qh=qh, ql=ql),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_b), lambda b: (0, b)),
-            pl.BlockSpec((n + 1, 1), lambda b: (0, 0)),
-            pl.BlockSpec((n + 1, 1), lambda b: (0, 0)),
+            pl.BlockSpec((nch, 1), lambda b: (0, 0)),
+            pl.BlockSpec((nch, 1), lambda b: (0, 0)),
+            pl.BlockSpec((nch, 1), lambda b: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((n + 1, block_b), lambda b: (0, b)),
-        out_shape=jax.ShapeDtypeStruct((n + 1, B), jnp.int32),
+        out_specs=pl.BlockSpec((nch, block_b), lambda b: (0, b)),
+        out_shape=jax.ShapeDtypeStruct((nch, B), jnp.int32),
         interpret=interpret,
-    )(g_row, m_all, pow15)
+    )(g_row, m_all, pow15, off)

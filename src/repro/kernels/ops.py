@@ -114,10 +114,12 @@ def _auto_block(nelems: int, interpret: bool) -> int:
 def codec_decode_op(codec, summed, *, block_b: int | None = None,
                     interpret: bool | None = None,
                     channel_major: bool = False):
-    """Fused gradient-codec decode: summed channels (..., n+1) -> f32 mean
+    """Fused gradient-codec decode: summed channels (..., nch) -> f32 mean
     gradient contribution (caller divides by world).  See codec_decode.py.
+    Redundant channels beyond the base (m_a, and m_b on locate-and-correct
+    codecs) ride along unread — the decode consumes base residues only.
 
-    channel_major=True takes the kernel-native (n+1, B) layout directly and
+    channel_major=True takes the kernel-native (nch, B) layout directly and
     returns (B,) — the zero-transpose path used by the bucketed pipeline.
     """
     from .codec_decode import codec_decode_kernel_call
@@ -154,10 +156,12 @@ def codec_encode_op(codec, g, *, block_b: int | None = None,
                     interpret: bool | None = None,
                     channel_major: bool = False):
     """Fused gradient-codec encode: f32 tensor (...,) -> packed int32
-    residues (..., n+1), bitwise identical to ``GradCodec.encode`` (which
-    needs global x64; this kernel does not).  See codec_encode.py.
+    residues (..., nch), bitwise identical to ``GradCodec.encode`` (which
+    needs global x64; this kernel does not).  nch = n base channels plus the
+    codec's redundant moduli (m_a alone, or m_a + m_b when the codec was
+    built with ``correct=True``).  See codec_encode.py.
 
-    channel_major=True returns the kernel-native (n+1, B) layout for a
+    channel_major=True returns the kernel-native (nch, B) layout for a
     flat (B,) input — the zero-transpose path used by the bucketed
     pipeline (the decode kernel consumes it directly).
     """
@@ -171,12 +175,18 @@ def codec_encode_op(codec, g, *, block_b: int | None = None,
         raise ValueError("Pallas kernels require bits<=15 (int32 lanes); "
                          "use GradCodec.encode for wider bases")
     interpret = _interpret_default() if interpret is None else interpret
+    reds = codec.redundant  # (m_a,) or (m_a, m_b)
     m_all = jnp.asarray(
-        np.concatenate([base.moduli_np, [base.ma]])[:, None], dtype=jnp.int32
+        np.concatenate([base.moduli_np, reds])[:, None], dtype=jnp.int32
     )
     pow15 = jnp.asarray(
-        [[(1 << 15) % int(m)] for m in base.moduli] + [[(1 << 15) % base.ma]],
+        [[(1 << 15) % int(m)] for m in tuple(base.moduli) + reds],
         dtype=jnp.int32,
+    )
+    # negative-embedding shift per row: base rows 0 (m_i | M), redundant
+    # rows M mod m_r
+    off = jnp.asarray(
+        [[0]] * base.n + [[base.M % r] for r in reds], dtype=jnp.int32
     )
     lead = g.shape if not channel_major else None
     row = g.astype(jnp.float32).reshape(1, -1)
@@ -185,10 +195,10 @@ def codec_encode_op(codec, g, *, block_b: int | None = None,
     gt, B = _pad_to(row, block_b, axis=1)
     block_b = min(block_b, gt.shape[1])
     out = codec_encode_kernel_call(
-        gt, m_all, pow15, n=base.n, scale=float(1 << codec.frac_bits),
+        gt, m_all, pow15, off, scale=float(1 << codec.frac_bits),
         qh=codec.qmax >> 15, ql=codec.qmax & 0x7FFF,
-        ma_off=base.M_mod_ma, block_b=block_b, interpret=interpret,
+        block_b=block_b, interpret=interpret,
     )
     if channel_major:
         return out[:, :B]
-    return out[:, :B].T.reshape(*lead, base.n + 1)
+    return out[:, :B].T.reshape(*lead, len(m_all))

@@ -7,6 +7,10 @@ async atomic saves, and a step-time watchdog (straggler hook).
 
     PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --smoke \
         --steps 30 --ckpt-dir /tmp/ck --save-every 10 [--rns-allreduce]
+
+    # RRNS locate-and-correct transport with an injected wire corruption
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-370m --smoke \
+        --steps 4 --rns-correct --inject-corrupt-step 2
 """
 from __future__ import annotations
 
@@ -26,19 +30,41 @@ from repro.train.optimizer import AdamWConfig, adamw_init
 from repro.train.train_step import make_train_step
 
 
-def make_rns_dp_step(cfg, opt_cfg, codec):
+def _corrupt_wire(codec):
+    """Transport hook that flips one residue of the local wire buffer —
+    element 0's channel-0 residue moves by +1 mod m_1, a guaranteed-real,
+    still-canonical corruption (the injection half of the --rns-correct
+    smoke demo; the repair half must undo it exactly)."""
+    m0 = int(codec.base.moduli[0])
+
+    def hook(buf):  # channel-major (n_channels, B)
+        return buf.at[0, 0].set(jnp.mod(buf[0, 0] + 1, m0))
+
+    return hook
+
+
+def make_rns_dp_step(cfg, opt_cfg, codec, *, repair=False, inject=False):
     """Data-parallel step with the paper's RNS-exact gradient all-reduce,
     bucketed: per-device grads encode (fused Pallas kernel when the codec
-    qualifies) into ONE contiguous (n+1, B_total) int32 buffer, the whole
-    pytree moves in a single per-channel psum, and the fused decode runs at
-    the optimizer boundary inside ``adamw_update`` (dist/grad_codec.py,
-    DESIGN.md §9).  Runs under shard_map over the 'data' axis."""
+    qualifies) into ONE contiguous (n_channels, B_total) int32 buffer, the
+    whole pytree moves in a single per-channel psum, and the fused decode
+    runs at the optimizer boundary inside ``adamw_update``
+    (dist/grad_codec.py, DESIGN.md §9).  Runs under shard_map over the
+    'data' axis.
+
+    repair=True adds the RRNS locate-and-correct pass on the wire buffer
+    (needs a ``correct=True`` codec, DESIGN.md §10); inject=True corrupts
+    one residue first, so the returned step demonstrates in-flight repair.
+    """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import Mesh, PartitionSpec as P
 
     ndev = len(jax.devices())
     mesh = Mesh(np.array(jax.devices()), ("data",))
-    step = make_train_step(cfg, opt_cfg, rns_codec=codec, rns_axis="data")
+    step = make_train_step(
+        cfg, opt_cfg, rns_codec=codec, rns_axis="data", rns_repair=repair,
+        transport_hook=_corrupt_wire(codec) if inject else None,
+    )
     fn = shard_map(
         step, mesh,
         in_specs=(P(), P(), P("data")),
@@ -61,12 +87,23 @@ def main(argv=None):
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--rns-allreduce", action="store_true",
                     help="use the paper's RNS gradient aggregation (DP demo)")
+    ap.add_argument("--rns-correct", action="store_true",
+                    help="RNS aggregation with the second redundant modulus "
+                         "and in-flight RRNS repair of corrupted wire "
+                         "buffers (implies --rns-allreduce)")
+    ap.add_argument("--inject-corrupt-step", type=int, default=-1,
+                    metavar="N",
+                    help="with --rns-correct: corrupt one wire residue at "
+                         "step N to demonstrate the in-place repair")
     ap.add_argument("--unfused-codec", action="store_true",
                     help="force the jnp encode/decode path for the RNS "
                          "codec (A/B against the fused Pallas kernels)")
     ap.add_argument("--watchdog-x", type=float, default=3.0,
                     help="warn when a step exceeds x * median step time")
     args = ap.parse_args(argv)
+    if args.inject_corrupt_step >= 0 and not args.rns_correct:
+        ap.error("--inject-corrupt-step needs --rns-correct (there is no "
+                 "repair path to demonstrate without it)")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -93,17 +130,26 @@ def main(argv=None):
             params, opt_state = tree["params"], tree["opt"]
             print(f"[resume] restored fingerprint-valid step {start_step}")
 
-    if args.rns_allreduce:
+    inject_fn = None
+    if args.rns_allreduce or args.rns_correct:
         from repro.dist.grad_codec import GradCodec
 
         codec = GradCodec.make(world=max(len(jax.devices()), 2),
-                               fused=not args.unfused_codec)
-        step_fn, ndev = make_rns_dp_step(cfg, opt_cfg, codec)
+                               fused=not args.unfused_codec,
+                               correct=args.rns_correct)
+        step_fn, ndev = make_rns_dp_step(cfg, opt_cfg, codec,
+                                         repair=args.rns_correct)
+        if args.rns_correct and args.inject_corrupt_step >= 0:
+            inject_fn, _ = make_rns_dp_step(cfg, opt_cfg, codec,
+                                            repair=True, inject=True)
         assert args.batch % ndev == 0, "batch must divide device count"
+        reds = "+".join(str(r) for r in codec.redundant)
         print(f"[rns] RNS gradient all-reduce over {ndev} device(s), "
-              f"base n={codec.base.n} moduli, m_a={codec.base.ma}, "
+              f"base n={codec.base.n} moduli, redundant {reds}, "
               f"bucketed single-psum transport, "
-              f"{'fused Pallas' if codec.use_fused else 'jnp'} codec")
+              f"{'fused Pallas' if codec.use_fused else 'jnp'} codec"
+              + (", RRNS locate-and-correct armed" if args.rns_correct
+                 else ""))
     else:
         step_fn = jax.jit(
             make_train_step(cfg, opt_cfg, microbatches=args.microbatches)
@@ -117,7 +163,9 @@ def main(argv=None):
         for _ in range(start_step, args.steps):
             step, batch = prefetch.next()
             t0 = time.time()
-            params, opt_state, metrics = step_fn(
+            fn = (inject_fn if inject_fn is not None
+                  and step == args.inject_corrupt_step else step_fn)
+            params, opt_state, metrics = fn(
                 params, opt_state,
                 jax.tree_util.tree_map(jnp.asarray, batch),
             )
@@ -128,6 +176,14 @@ def main(argv=None):
             if len(times) > 3 and dt > args.watchdog_x * med:
                 print(f"[watchdog] step {step} took {dt:.2f}s "
                       f"(median {med:.2f}s) — straggler suspected")
+            if metrics.get("repaired", 0) > 0:
+                print(f"[rns-correct] repaired "
+                      f"{int(metrics['repaired'])} corrupted wire "
+                      f"value(s) in place at step {step} — no rollback")
+            if metrics.get("unrepairable", 0) > 0:
+                print(f"[rns-correct] step {step}: "
+                      f"{int(metrics['unrepairable'])} element(s) beyond "
+                      f"single-channel repair — checkpoint rollback advised")
             print(f"step {step:4d} loss={metrics['loss']:.4f} "
                   f"gnorm={metrics['gnorm']:.3f} {dt*1e3:.0f}ms")
             if args.ckpt_dir and (step + 1) % args.save_every == 0:

@@ -41,7 +41,8 @@ def make_loss_fn(cfg):
 
 def make_train_step(
     cfg, opt_cfg: AdamWConfig, *, microbatches: int = 1, grad_shardings=None,
-    rns_codec=None, rns_axis: str = "data",
+    rns_codec=None, rns_axis: str = "data", rns_repair: bool = False,
+    transport_hook=None,
 ):
     """grad_shardings: optional NamedSharding tree matching params.  Pins
     gradients to the PARAMETER sharding so ZeRO-1's differently-sharded
@@ -56,7 +57,23 @@ def make_train_step(
     single bucketed per-channel int32 psum (``tree_pack``), and the fused
     decode runs inside ``adamw_update`` at the optimizer boundary — the
     paper's exact, order-independent aggregation on the real hot path
-    (DESIGN.md §9).  Loss metrics are pmean'd over the same axis."""
+    (DESIGN.md §9).  Loss metrics are pmean'd over the same axis.
+
+    rns_repair: with a locate-and-correct codec (``make(correct=True)``),
+    run RRNS repair on the local wire buffer before the psum: any single
+    corrupted channel per element is rebuilt from the surviving channels in
+    place instead of poisoning the all-reduce (DESIGN.md §10).  Adds a
+    ``repaired`` metric (global count of corrected elements).
+
+    transport_hook: optional ``buf -> buf`` applied to the packed
+    channel-major wire buffer between encode and repair/psum — the seam
+    where wire corruption lives, used by fault-injection tests and the
+    ``--rns-correct`` smoke demo."""
+    if rns_repair and (rns_codec is None or rns_codec.mb is None):
+        raise ValueError(
+            "rns_repair requires a locate-and-correct codec: "
+            "GradCodec.make(correct=True)"
+        )
     loss_fn = make_loss_fn(cfg)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
@@ -102,6 +119,22 @@ def make_train_step(
             from repro.dist.grad_codec import tree_decode, tree_pack
 
             buf, meta = tree_pack(rns_codec, grads)
+            if transport_hook is not None:  # fault-injection seam
+                buf = transport_hook(buf)
+            repaired = unrepairable = None
+            if rns_repair:
+                # RRNS locate-and-correct on the local channel-major wire
+                # buffer: fresh encodings (wraps=0), so single-channel
+                # location is exact and the repaired buffer enters the psum
+                # as if the corruption never happened
+                fixed, fault = rns_codec.correct_packed(buf.T)
+                buf = fixed.T
+                repaired = jax.lax.psum(
+                    jnp.sum(fault >= 0).astype(jnp.int32), rns_axis
+                )
+                unrepairable = jax.lax.psum(
+                    jnp.sum(fault == -2).astype(jnp.int32), rns_axis
+                )
             summed = jax.lax.psum(buf, rns_axis)  # the ONLY grad collective
             nd = jax.lax.psum(1.0, rns_axis)      # trace-time constant
             params, opt_state, gnorm = adamw_update(
@@ -114,6 +147,9 @@ def make_train_step(
                 jax.lax.pmean(x, rns_axis) for x in (loss, ce, aux)
             )
         metrics = {"loss": loss, "ce": ce, "aux": aux, "gnorm": gnorm}
+        if rns_codec is not None and rns_repair:
+            metrics["repaired"] = repaired
+            metrics["unrepairable"] = unrepairable
         return params, opt_state, metrics
 
     return train_step
