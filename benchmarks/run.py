@@ -13,7 +13,11 @@ additionally writes the same rows as machine-readable JSON (default
   extension_methods    exactness + timing of MRC / Shenoy / Kawamura
   grad_codec           wire bytes + encode/allreduce/decode cost vs fp32
   codec_correct        RRNS detect vs locate-and-correct cost + wire tax
+  rns_array_api        typed RnsArray frontend vs legacy dispatch (~0 cost)
   division_scaling     comparison-driven divmod / scaling costs
+
+``--json`` also splits the ``rns_array_*`` rows into BENCH_api.json so the
+typed-API overhead has its own tracked artifact.
 """
 from __future__ import annotations
 
@@ -349,6 +353,51 @@ def codec_correct():
     assert ok, "RRNS repair must restore the corrupted buffer bitwise"
 
 
+# ----------------------------------------------------------- typed frontend
+def rns_array_api():
+    """Dispatch overhead of the typed ``RnsArray`` frontend vs the legacy
+    call signatures.  Under jit both routes trace to the same computation
+    (the legacy functions ARE shims over the type), so steady-state time
+    per call must be ~identical — this table guards that the API redesign
+    stays free.  Rows land in BENCH_api.json for trend tracking."""
+    from repro.core import RnsArray
+
+    rng = np.random.default_rng(9)
+    base = make_base(8, bits=15)
+    ops = _rand_operands(base, BATCH, rng)
+    a = RnsArray.from_parts(base, ops[0], ops[1])
+    b = RnsArray.from_parts(base, ops[2], ops[3])
+    legacy = jax.jit(lambda x1, a1, x2, a2: rns_compare_ge(base, x1, a1, x2, a2))
+    typed = jax.jit(lambda u, v: u >= v)
+    t_leg = _time(legacy, *ops)
+    t_typ = _time(typed, a, b)
+    bitwise = bool(jnp.all(typed(a, b) == legacy(*ops)))
+    emit("rns_array_compare", t_typ,
+         f"overhead_vs_legacy={t_typ/t_leg:.3f}x,bitwise={bitwise}")
+    emit("rns_array_compare_legacy", t_leg, f"batch={BATCH}")
+
+    base8 = make_base(4, bits=8)
+    X = [int(rng.integers(1, base8.M)) for _ in range(8)]
+    D = [int(rng.integers(1, x)) for x in X]
+    xp = jnp.asarray(np.stack([np.concatenate(
+        [base8.residues_of(v), [v % base8.ma]]).astype(np.int32) for v in X]))
+    dp = jnp.asarray(np.stack([np.concatenate(
+        [base8.residues_of(v), [v % base8.ma]]).astype(np.int32) for v in D]))
+    ax = RnsArray.from_packed(base8, xp)
+    ad = RnsArray.from_packed(base8, dp)
+    f_leg = jax.jit(lambda p, q: divmod_rns(base8, p, q))
+    f_typ = jax.jit(lambda u, v: u.divmod(v))
+    t_leg = _time(f_leg, xp, dp, iters=5)
+    t_typ = _time(f_typ, ax, ad, iters=5)
+    ql, rl = f_leg(xp, dp)
+    qt, rt = f_typ(ax, ad)
+    bitwise = bool(jnp.all(ql == qt.to_packed()) and
+                   jnp.all(rl == rt.to_packed()))
+    emit("rns_array_divmod", t_typ,
+         f"overhead_vs_legacy={t_typ/t_leg:.3f}x,bitwise={bitwise}")
+    emit("rns_array_divmod_legacy", t_leg, "batch=8")
+
+
 # --------------------------------------------------------- division/scaling
 def division_scaling():
     base = make_base(4, bits=8)
@@ -377,6 +426,7 @@ TABLES = [
     grad_codec,
     grad_codec_allreduce,
     codec_correct,
+    rns_array_api,
     division_scaling,
 ]
 
@@ -387,6 +437,9 @@ def main(argv=None) -> None:
     ap.add_argument("--json", nargs="?", const="BENCH_codec.json",
                     default=None, metavar="PATH",
                     help="also write rows as JSON (default BENCH_codec.json)")
+    ap.add_argument("--json-api", default="BENCH_api.json", metavar="PATH",
+                    help="with --json: where the rns_array_* rows (typed-API "
+                         "dispatch overhead) are additionally written")
     ap.add_argument("--small", action="store_true",
                     help="CI smoke sizes: trimmed sweeps, same coverage")
     args = ap.parse_args(argv)
@@ -404,6 +457,11 @@ def main(argv=None) -> None:
         with open(args.json, "w") as f:
             json.dump(RESULTS, f, indent=1, sort_keys=True)
         print(f"# wrote {len(RESULTS)} rows to {args.json}")
+        api_rows = {k: v for k, v in RESULTS.items()
+                    if k.startswith("rns_array_")}
+        with open(args.json_api, "w") as f:
+            json.dump(api_rows, f, indent=1, sort_keys=True)
+        print(f"# wrote {len(api_rows)} rows to {args.json_api}")
 
 
 if __name__ == "__main__":

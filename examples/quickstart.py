@@ -1,4 +1,9 @@
-"""Quickstart: the paper's RNS comparison in five minutes.
+"""Quickstart: the paper's RNS comparison in five minutes — typed API.
+
+Everything goes through ``RnsArray`` (repro.core.array): ONE type carrying
+residues + the redundant m_a channel, with the paper's algorithms as
+methods and operators.  Backend selection (pure jnp vs the fused Pallas
+kernels) is a context manager, not per-call knobs.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,42 +12,66 @@ import numpy as np
 import jax.numpy as jnp
 
 import repro  # noqa: F401  (enables x64)
-from repro.core import make_base, rns_compare_ge, classic_compare_ge, rns_to_int
-from repro.kernels import compare_op
+from repro.core import (
+    Layout,
+    RnsArray,
+    backend,
+    classic_compare_ge,
+    make_base,
+    rns_to_int,
+)
 
 # 1. Build an RNS base: 8 15-bit prime moduli + a redundant modulus m_a.
 base = make_base(8, bits=15)
 print(f"base: n={base.n} moduli, dynamic range M ~ 2^{base.M.bit_length()}, "
       f"m_a={base.ma}")
 
-# 2. Represent two big integers as residue vectors (+ redundant residues).
+# 2. Lift two big integers into the representation.  ``encode`` computes the
+#    residue channels AND the consistent redundant m_a channel in one go.
 rng = np.random.default_rng(0)
 N1 = int(rng.integers(0, 1 << 63)) % base.M
 N2 = int(rng.integers(0, 1 << 63)) % base.M
-x1, x2 = jnp.asarray(base.residues_of(N1)), jnp.asarray(base.residues_of(N2))
-a1, a2 = jnp.asarray(N1 % base.ma), jnp.asarray(N2 % base.ma)
+a = RnsArray.encode(base, jnp.asarray([N1]))
+b = RnsArray.encode(base, jnp.asarray([N2]))
+print(f"layout={a.layout.name}, channels={a.n_channels} "
+      f"(n base + m_a riding along)")
 
 # 3. Compare with ONE mixed-radix conversion (Algorithm 1 / Theorem 1).
-ge = bool(rns_compare_ge(base, x1, a1, x2, a2))
+ge = bool((a >= b)[0])
 print(f"N1 >= N2?  RNSComp says {ge}, truth is {N1 >= N2}")
 assert ge == (N1 >= N2)
 
 # 4. The classical method needs TWO conversions (the paper's baseline).
-assert bool(classic_compare_ge(base, x1, x2)) == (N1 >= N2)
+assert bool(classic_compare_ge(base, a.x, b.x)[0]) == (N1 >= N2)
 
-# 5. Batched + fused on TPU (interpret=True runs the same kernel on CPU).
+# 5. Arithmetic stays exact and in-representation; division and scaling are
+#    comparison-driven (the operations the paper's conclusion unlocks).
+small = make_base(4, bits=8)
+x = RnsArray.encode(small, jnp.asarray([100_000, 54_321]))
+d = RnsArray.encode(small, jnp.asarray([317, 1000]))
+q, r = x.divmod(d)
+assert q.to_int().tolist() == [100_000 // 317, 54]
+assert r.to_int().tolist() == [100_000 % 317, 321]
+print(f"divmod in pure RNS: 100000 = {int(q.to_int()[0])}*317 "
+      f"+ {int(r.to_int()[0])} ✓")
+assert x.scale_pow2(3).to_int().tolist() == [100_000 // 8, 54_321 // 8]
+
+# 6. Batched + fused on TPU: the SAME call sites, under the pallas backend
+#    (off-TPU the kernels run in interpret mode — same bits, slower).
 batch = 4096
 m = np.asarray(base.moduli_np)
 xs1 = rng.integers(0, m, size=(batch, base.n)).astype(np.int32)
 xs2 = rng.integers(0, m, size=(batch, base.n)).astype(np.int32)
-vals1 = [rns_to_int(base, r) for r in xs1]
-vals2 = [rns_to_int(base, r) for r in xs2]
-as1 = np.asarray([v % base.ma for v in vals1], np.int32)
-as2 = np.asarray([v % base.ma for v in vals2], np.int32)
-verdicts = compare_op(
-    base, jnp.asarray(xs1), jnp.asarray(as1), jnp.asarray(xs2),
-    jnp.asarray(as2), interpret=True,
-)
+lift = lambda xs: RnsArray.from_parts(base, jnp.asarray(xs)).normalize(
+    Layout.BASE_MA)                 # BASE -> BASE_MA: compute m_a channel
+A, B = lift(xs1), lift(xs2)
+with backend("pallas"):
+    verdicts = A >= B           # fused Algorithm-1 kernel
+vals1 = [rns_to_int(base, row) for row in xs1]   # host-side big-int oracle
+vals2 = [rns_to_int(base, row) for row in xs2]
 truth = np.asarray(vals1) >= np.asarray(vals2)
 assert (np.asarray(verdicts) == truth).all()
-print(f"fused Pallas kernel: {batch} comparisons, all correct ✓")
+jnp_verdicts = A >= B           # default backend: jitted jnp route
+assert (np.asarray(verdicts) == np.asarray(jnp_verdicts)).all()
+print(f"fused Pallas kernel: {batch} comparisons, all correct and "
+      f"bitwise-identical to the jnp backend ✓")

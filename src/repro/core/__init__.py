@@ -1,7 +1,18 @@
 """Core RNS library — the paper's contribution as composable JAX modules.
 
 Public API re-exports; see DESIGN.md §2 for the inventory.
+
+The typed frontend is ``RnsArray`` (+ the ``backend`` context manager for
+jnp/pallas dispatch, DESIGN.md §11); the loose functions below it are the
+implementations it routes through, kept public as legacy shims.
 """
+from .array import Layout, RnsArray  # noqa: F401
+from .dispatch import (  # noqa: F401
+    backend,
+    get_backend,
+    interpret_default,
+    resolve_backend,
+)
 from .base import RNSBase, gen_coprime_moduli, make_base  # noqa: F401
 from .arith import add, sub, mul, neg, mul_const  # noqa: F401
 from .mrc import mrc, mrc_unrolled, mrs_ge, mrs_to_int  # noqa: F401

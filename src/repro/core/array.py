@@ -1,0 +1,562 @@
+"""``RnsArray`` — the paper's representation as a first-class JAX type.
+
+The paper's contribution is a *representation*: residues in a base
+``B = {m_1..m_n}`` plus the redundant modulus ``m_a`` that makes full-range
+comparison (and hence sign, scaling, division) possible.  Historically this
+repo exposed it as ~30 loose functions over three incompatible buffer
+conventions — separate ``(x, xa)`` argument pairs, packed ``(..., n+1)``
+tensors, and the codec's channel-major ``(n_channels, B)`` wire buffers.
+``RnsArray`` lifts all three into ONE typed frontend:
+
+* ``residues`` — the only dynamic leaf: an int tensor carrying every
+  channel, either channels-LAST (``channel_axis=-1``, the algebraic
+  layout) or channels-FIRST (``channel_axis=0``, the kernels' native tile
+  / wire layout).  Everything else is static aux data, so instances flow
+  through ``jax.jit`` / ``vmap`` / ``lax.psum`` / ``tree_map`` as ordinary
+  pytrees.
+* ``layout`` — how many redundant channels ride along: ``BASE`` (none),
+  ``BASE_MA`` (the paper's ``m_a``), ``RRNS`` (``m_a`` + ``m_b``: the
+  locate-and-correct pair of DESIGN.md §10; ``mb`` holds the second
+  modulus since ``RNSBase`` only carries ``m_a``).
+* ``signed`` — whether the value uses the signed embedding ``v -> v mod M``
+  with ``|v| < M/2`` (DESIGN.md §4).
+
+Every method routes through the SAME implementations the legacy functions
+use — pure-jnp ``core.*`` or the Pallas kernels in ``kernels/ops.py`` —
+selected once per op by the active backend (``repro.core.backend``,
+see dispatch.py) instead of per-call ``interpret=``/``unroll=`` knobs.
+The legacy entry points survive as thin shims that lift their arguments
+into ``RnsArray`` and deconstruct the result, so both APIs are
+bitwise-identical by construction (asserted in tests/test_rns_array.py).
+
+Doctest tour::
+
+    >>> import jax, jax.numpy as jnp
+    >>> from repro.core import RnsArray, Layout, make_base
+    >>> base = make_base(4, bits=8)
+    >>> a = RnsArray.encode(base, jnp.asarray([1000, 77]))
+    >>> b = RnsArray.encode(base, jnp.asarray([999, 78]))
+    >>> a.layout, a.n_channels                  # residues + m_a channel
+    (<Layout.BASE_MA: 'base_ma'>, 5)
+    >>> (a >= b).tolist()                       # Algorithm 1, one MRC each
+    [True, False]
+    >>> (a - b).to_int().tolist()               # exact; signed result view
+    [1, -1]
+    >>> q, r = a.divmod(b)                      # comparison-driven division
+    >>> q.to_int().tolist(), r.to_int().tolist()
+    ([1, 0], [1, 77])
+    >>> jax.tree_util.tree_leaves(a)[0].shape          # it's a pytree
+    (2, 5)
+    >>> s = RnsArray.encode_signed(base, jnp.asarray([-3, 5]))
+    >>> s.is_negative().tolist()                # sign = ONE comparison
+    [True, False]
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .base import RNSBase
+from .dispatch import resolve_backend
+
+__all__ = ["Layout", "RnsArray"]
+
+
+class Layout(enum.Enum):
+    """Channel inventory of an ``RnsArray`` buffer.
+
+    BASE     — ``n`` base residue channels only (ring arithmetic, MRC).
+    BASE_MA  — ``n + 1``: base + the paper's redundant ``m_a`` channel
+               (enables Algorithm-1 comparison and everything built on it).
+    RRNS     — ``n + 2``: base + ``m_a`` + ``m_b``, the locate-and-correct
+               redundant pair of the gradient codec (DESIGN.md §10).
+    """
+
+    BASE = "base"
+    BASE_MA = "base_ma"
+    RRNS = "rrns"
+
+    @property
+    def n_redundant(self) -> int:
+        return {Layout.BASE: 0, Layout.BASE_MA: 1, Layout.RRNS: 2}[self]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True, eq=False, repr=False)
+class RnsArray:
+    """A batched RNS value: one residue tensor + static representation info.
+
+    Construct via the classmethods (``encode``, ``encode_signed``,
+    ``from_packed``, ``from_parts``) rather than the raw constructor —
+    they compute consistent redundant channels for you.
+    """
+
+    residues: jax.Array
+    base: RNSBase
+    layout: Layout = Layout.BASE_MA
+    signed: bool = False
+    channel_axis: int = -1          # -1 = channels-last, 0 = channel-major
+    mb: int | None = None           # second redundant modulus (RRNS only)
+
+    def __post_init__(self):
+        if self.channel_axis not in (0, -1):
+            raise ValueError("channel_axis must be 0 or -1")
+        if self.layout is Layout.RRNS and self.mb is None:
+            raise ValueError("RRNS layout needs the second redundant "
+                             "modulus: pass mb=")
+        if self.layout is not Layout.RRNS and self.mb is not None:
+            raise ValueError(f"mb is only meaningful for RRNS, not "
+                             f"{self.layout}")
+        shape = getattr(self.residues, "shape", None)
+        if shape is not None and len(shape) > 0:
+            if shape[self.channel_axis] != self.n_channels:
+                raise ValueError(
+                    f"residues carry {shape[self.channel_axis]} channels at "
+                    f"axis {self.channel_axis}, but layout {self.layout} on "
+                    f"an n={self.base.n} base needs {self.n_channels}"
+                )
+
+    # ------------------------------------------------------------- pytree
+    def tree_flatten(self):
+        aux = (self.base, self.layout, self.signed, self.channel_axis,
+               self.mb)
+        return (self.residues,), aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        # Bypass __post_init__: transforms unflatten with tracers and
+        # internal placeholder objects that have no shape to validate.
+        obj = object.__new__(cls)
+        for name, val in zip(
+            ("base", "layout", "signed", "channel_axis", "mb"), aux
+        ):
+            object.__setattr__(obj, name, val)
+        object.__setattr__(obj, "residues", children[0])
+        return obj
+
+    # -------------------------------------------------------- shape & views
+    @property
+    def n_channels(self) -> int:
+        return self.base.n + self.layout.n_redundant
+
+    @property
+    def redundant_moduli(self) -> tuple[int, ...]:
+        """Redundant channel moduli in channel order: (), (m_a,) or
+        (m_a, m_b)."""
+        return ((), (self.base.ma,), (self.base.ma, self.mb))[
+            self.layout.n_redundant
+        ]
+
+    @property
+    def channel_moduli(self) -> np.ndarray:
+        """(n_channels,) modulus per channel, base then redundant."""
+        return np.concatenate(
+            [self.base.moduli_np,
+             np.asarray(self.redundant_moduli, dtype=self.base.dtype)]
+        ) if self.redundant_moduli else self.base.moduli_np
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        """Batch shape (the channel axis removed)."""
+        s = self.residues.shape
+        return s[1:] if self.channel_axis == 0 else s[:-1]
+
+    @property
+    def dtype(self):
+        return self.residues.dtype
+
+    def _cl(self):
+        """Residues with channels LAST regardless of storage layout."""
+        if self.channel_axis == 0:
+            return jnp.moveaxis(self.residues, 0, -1)
+        return self.residues
+
+    def _wrap(self, buf_cl, **overrides):
+        """Rebuild an RnsArray from a channels-last buffer, preserving the
+        storage layout and aux (unless overridden)."""
+        aux = dict(layout=self.layout, signed=self.signed,
+                   channel_axis=self.channel_axis, mb=self.mb)
+        aux.update(overrides)
+        if aux["channel_axis"] == 0:
+            buf_cl = jnp.moveaxis(buf_cl, -1, 0)
+        return RnsArray(buf_cl, self.base, **aux)
+
+    @property
+    def x(self):
+        """Base residue channels, channels-last ``(..., n)``."""
+        return self._cl()[..., : self.base.n]
+
+    @property
+    def xa(self):
+        """The redundant ``m_a`` channel ``(...,)`` (BASE_MA/RRNS only)."""
+        self._need_ma("xa")
+        return self._cl()[..., self.base.n]
+
+    def to_packed(self):
+        """The legacy leaf-major buffer: ``(..., n_channels)`` channels-last
+        (``(..., n+1)`` packed convention for BASE_MA)."""
+        return self._cl()
+
+    def with_channel_axis(self, axis: int) -> "RnsArray":
+        """Same value, channels moved to ``axis`` (0 or -1)."""
+        if axis == self.channel_axis:
+            return self
+        return self._wrap(self._cl(), channel_axis=axis)
+
+    def __repr__(self):
+        return (f"RnsArray(residues={self.residues!r}, n={self.base.n}, "
+                f"layout={self.layout.name}, signed={self.signed}, "
+                f"channel_axis={self.channel_axis})")
+
+    def _need_ma(self, what: str):
+        if self.layout is Layout.BASE:
+            raise ValueError(
+                f"{what} needs the redundant m_a channel: this RnsArray has "
+                f"layout BASE — use .normalize(Layout.BASE_MA) to extend"
+            )
+
+    def _m_like(self, ref):
+        return jnp.asarray(self.channel_moduli, dtype=ref.dtype)
+
+    # --------------------------------------------------- ring arithmetic
+    def _lift(self, other) -> "RnsArray":
+        if isinstance(other, RnsArray):
+            if other.base is not self.base and other.base != self.base:
+                raise ValueError("RnsArray ops need matching bases")
+            if other.layout is not self.layout or other.mb != self.mb:
+                raise ValueError(
+                    f"RnsArray ops need matching layouts: "
+                    f"{self.layout} vs {other.layout}"
+                )
+            return other.with_channel_axis(self.channel_axis)
+        if isinstance(other, (int, np.integer)):
+            # channel-wise residues of the constant, broadcast over batch
+            v = int(other) % self.base.M
+            res = [v % int(m) for m in self.channel_moduli]
+            return RnsArray(
+                jnp.broadcast_to(
+                    jnp.asarray(res, dtype=self.dtype),
+                    (*self.shape, self.n_channels),
+                ),
+                self.base, layout=self.layout, signed=self.signed,
+                channel_axis=-1, mb=self.mb,
+            ).with_channel_axis(self.channel_axis)
+        return NotImplemented
+
+    def __add__(self, other) -> "RnsArray":
+        other = self._lift(other)
+        if other is NotImplemented:
+            return NotImplemented
+        a, b = self._cl(), other._cl()
+        m = self._m_like(a)
+        s = a + b
+        out = jnp.where(s >= m, s - m, s)   # both reduced => s in [0, 2m)
+        return self._wrap(out, signed=self.signed or other.signed)
+
+    def __sub__(self, other) -> "RnsArray":
+        other = self._lift(other)
+        if other is NotImplemented:
+            return NotImplemented
+        a, b = self._cl(), other._cl()
+        m = self._m_like(a)
+        d = a - b
+        out = jnp.where(d < 0, d + m, d)
+        return self._wrap(out, signed=True)
+
+    def __neg__(self) -> "RnsArray":
+        a = self._cl()
+        m = self._m_like(a)
+        return self._wrap(jnp.where(a == 0, a, m - a), signed=True)
+
+    def __mul__(self, other) -> "RnsArray":
+        other = self._lift(other)
+        if other is NotImplemented:
+            return NotImplemented
+        if resolve_backend() == "pallas" and self.base.bits <= 15:
+            from repro.kernels.ops import modmul_op
+
+            return modmul_op(self, other)
+        a, b = self._cl(), other._cl()
+        out = jnp.mod(a * b, self._m_like(a))
+        return self._wrap(out, signed=self.signed or other.signed)
+
+    __radd__ = __add__
+    __rmul__ = __mul__
+
+    def __rsub__(self, other):
+        lifted = self._lift(other)
+        if lifted is NotImplemented:
+            return NotImplemented
+        return lifted - self
+
+    # NOTE on redundant channels under arithmetic: each channel computes in
+    # its OWN modulus, so after the base value wraps mod M the carried
+    # m_a/m_b channels track the UN-wrapped integer — the exact discipline
+    # division.py and the gradient codec rely on.  Re-anchor with
+    # ``normalize()`` before Algorithm-1 queries if wraps may have occurred
+    # (GradCodec.verify_packed exploits the discrepancy to detect faults).
+
+    # ------------------------------------------------------- comparisons
+    def compare_ge(self, other, *, unroll: bool = False):
+        """Algorithm 1 / Theorem 1: elementwise ``self >= other`` over the
+        full range [0, M).  One MRC + one Alg.-3 dot; routed to the fused
+        Pallas kernel under the ``pallas`` backend."""
+        self._need_ma("compare_ge")
+        other = self._lift(other)
+        if other is NotImplemented:
+            raise TypeError("compare_ge needs an RnsArray (or int) operand")
+        if resolve_backend() == "pallas" and self.base.bits <= 15:
+            from repro.kernels.ops import compare_op
+
+            return compare_op(self, other)
+        from .compare import _compare_ge_impl
+
+        return _compare_ge_impl(
+            self.base, self.x, self.xa, other.x, other.xa, unroll=unroll
+        )
+
+    def __ge__(self, other):
+        lifted = self._lift(other)
+        if lifted is NotImplemented:
+            return NotImplemented
+        return self.compare_ge(lifted)
+
+    def __le__(self, other):
+        other = self._lift(other)
+        if other is NotImplemented:
+            return NotImplemented
+        return other.compare_ge(self)
+
+    def __gt__(self, other):
+        le = self.__le__(other)
+        return NotImplemented if le is NotImplemented else ~le
+
+    def __lt__(self, other):
+        ge = self.__ge__(other)
+        return NotImplemented if ge is NotImplemented else ~ge
+
+    def is_negative(self):
+        """Sign of a signed-embedded value: ONE Alg.-1 comparison against
+        ceil(M/2) (DESIGN.md §4)."""
+        self._need_ma("is_negative")
+        if not self.signed:
+            raise ValueError("is_negative needs signed=True (the unsigned "
+                             "range [0, M) has no sign)")
+        from .signed import _is_negative_impl
+
+        return _is_negative_impl(self.base, self._alg1_packed())
+
+    def abs_ge(self, thr: int):
+        """|value| >= thr for signed embeddings: two Alg.-1 comparisons."""
+        self._need_ma("abs_ge")
+        if not self.signed:
+            raise ValueError("abs_ge needs signed=True")
+        from .signed import _abs_ge_impl
+
+        return _abs_ge_impl(self.base, self._alg1_packed(), int(thr))
+
+    def _alg1_packed(self):
+        """The (..., n+1) channels-last slice Algorithm-1 consumers eat —
+        base residues + m_a (the RRNS m_b channel is correction metadata
+        and plays no part in comparisons)."""
+        return self._cl()[..., : self.base.n + 1]
+
+    # ------------------------------------------------------- conversions
+    def to_mrs(self):
+        """Mixed-radix digits ``(..., n)`` (Alg. 2; kernel under pallas)."""
+        if resolve_backend() == "pallas" and self.base.bits <= 15:
+            from repro.kernels.ops import mrc_op
+
+            return mrc_op(self)
+        from .mrc import mrc
+
+        return mrc(self.base, self.x)
+
+    def to_int(self):
+        """Exact int64 values (requires M < 2**62; signed-aware).
+
+        >>> import jax.numpy as jnp
+        >>> from repro.core import RnsArray, make_base
+        >>> base = make_base(3, bits=15)
+        >>> v = jnp.asarray([123456789, -42])
+        >>> RnsArray.encode_signed(base, v).to_int().tolist()
+        [123456789, -42]
+        """
+        from .convert import rns_to_tensor
+
+        v = rns_to_tensor(self.base, self.x)
+        if self.signed:
+            half = (self.base.M + 1) // 2
+            v = jnp.where(v >= half, v - self.base.M, v)
+        return v
+
+    def extend(self, targets: tuple[int, ...]):
+        """Exact MRC base extension: residues of the value mod each target
+        modulus, shape ``(..., T)`` (kernel MRC under pallas)."""
+        targets = tuple(int(t) for t in targets)
+        if resolve_backend() == "pallas" and self.base.bits <= 15:
+            from .convert import mrs_dot_mod
+
+            return mrs_dot_mod(self.base, self.to_mrs(), targets)
+        from .extend import _extend_mrc_impl
+
+        return _extend_mrc_impl(self.base, self.x, targets)
+
+    def normalize(self, layout: Layout | None = None, *,
+                  mb: int | None = None) -> "RnsArray":
+        """Recompute the redundant channels from the base residues (one MRC
+        + one Alg.-3 dot per channel).  Re-anchors m_a/m_b after ring wraps;
+        also converts BETWEEN layouts (pass ``layout=``, and ``mb=`` when
+        lifting to RRNS)."""
+        layout = self.layout if layout is None else layout
+        if layout is Layout.RRNS:
+            mb = self.mb if mb is None else mb
+            if mb is None:
+                raise ValueError("normalize to RRNS needs mb=")
+        else:
+            mb = None
+        reds = ((), (self.base.ma,), (self.base.ma, mb))[layout.n_redundant]
+        x = self.x
+        if not reds:
+            return self._wrap(x, layout=layout, mb=None)
+        from .convert import mrs_dot_mod
+
+        xr = mrs_dot_mod(self.base, self.to_mrs(), reds)
+        return self._wrap(
+            jnp.concatenate([x, xr.astype(x.dtype)], axis=-1),
+            layout=layout, mb=mb,
+        )
+
+    # ------------------------------------------------- scaling & division
+    def halve(self) -> "RnsArray":
+        """Exact floor(X/2) (paper's scaling primitive): parity via the
+        mixed-radix digit sum, then multiply by 2^{-1} per channel.
+        Unsigned only: floor-halving the embedding X = v mod M is NOT
+        floor(v/2) for negative v."""
+        if self.signed:
+            raise ValueError("halve/scale_pow2 are defined on unsigned "
+                             "ranges; strip signs first")
+        from .division import _halve_impl
+
+        return self._wrap(
+            _halve_impl(self.base, self._cl(), self.redundant_moduli)
+        )
+
+    def scale_pow2(self, k: int) -> "RnsArray":
+        """Exact floor(X / 2^k): k chained halvings."""
+        out = self
+        for _ in range(int(k)):
+            out = out.halve()
+        return out
+
+    def divmod(self, other) -> tuple["RnsArray", "RnsArray"]:
+        """(Q, R) with X = Q·D + R, 0 <= R < D, entirely in RNS — restoring
+        division where every magnitude decision is one Algorithm-1
+        comparison (2·nbits+1 of them).  Unsigned operands only."""
+        self._need_ma("divmod")
+        other = self._lift(other)
+        if other is NotImplemented:
+            raise TypeError("divmod needs an RnsArray (or int) divisor")
+        if self.signed or other.signed:
+            raise ValueError("divmod is defined on unsigned ranges; "
+                             "strip signs first")
+        from .division import _divmod_impl
+
+        q, r = _divmod_impl(
+            self.base, self._alg1_packed(), other._alg1_packed()
+        )
+        if self.layout is Layout.RRNS:
+            # quotient/remainder carry fresh m_a channels; rebuild m_b
+            lift = lambda p: RnsArray(
+                p, self.base, layout=Layout.BASE_MA,
+            ).normalize(Layout.RRNS, mb=self.mb).with_channel_axis(
+                self.channel_axis
+            )
+        else:
+            lift = lambda p: self._wrap(p)
+        return lift(q), lift(r)
+
+    # ------------------------------------------------------- constructors
+    @classmethod
+    def encode(cls, base: RNSBase, values, *,
+               layout: Layout = Layout.BASE_MA,
+               mb: int | None = None,
+               channel_axis: int = -1) -> "RnsArray":
+        """Unsigned integer tensor (values in [0, M), int64-ranged) ->
+        residues + consistent redundant channels.
+
+        >>> import jax.numpy as jnp
+        >>> from repro.core import RnsArray, make_base, rns_to_int
+        >>> base = make_base(4, bits=8)
+        >>> a = RnsArray.encode(base, jnp.asarray([1234]))
+        >>> int(a.xa[0]) == 1234 % base.ma
+        True
+        """
+        from .convert import tensor_to_rns
+
+        values = jnp.asarray(values)
+        res = tensor_to_rns(base, values)
+        reds = ((), (base.ma,), (base.ma, mb))[layout.n_redundant]
+        if layout is Layout.RRNS and mb is None:
+            raise ValueError("encode to RRNS needs mb=")
+        cols = [res]
+        for mr in reds:
+            cols.append(
+                jnp.mod(values.astype(jnp.int64), mr)[..., None]
+                .astype(res.dtype)
+            )
+        return cls(
+            jnp.concatenate(cols, axis=-1) if reds else res,
+            base, layout=layout, signed=False, channel_axis=-1,
+            mb=mb if layout is Layout.RRNS else None,
+        ).with_channel_axis(channel_axis)
+
+    @classmethod
+    def encode_signed(cls, base: RNSBase, values, *,
+                      channel_axis: int = -1) -> "RnsArray":
+        """Signed integer tensor (|v| < M/2) -> signed embedding with a
+        consistent m_a channel (DESIGN.md §4)."""
+        from .signed import _encode_signed_impl
+
+        packed = _encode_signed_impl(base, jnp.asarray(values))
+        return cls(
+            packed, base, layout=Layout.BASE_MA, signed=True,
+            channel_axis=-1,
+        ).with_channel_axis(channel_axis)
+
+    @classmethod
+    def from_packed(cls, base: RNSBase, packed, *, signed: bool = False,
+                    mb: int | None = None,
+                    channel_axis: int = -1) -> "RnsArray":
+        """Lift a legacy buffer: ``(..., n)`` (BASE), ``(..., n+1)``
+        (BASE_MA) or ``(..., n+2)`` (RRNS, needs ``mb=``) at
+        ``channel_axis``.  The redundant channels are taken AS IS —
+        no consistency check (that is ``GradCodec.verify_packed``'s job)."""
+        packed = jnp.asarray(packed)
+        extra = packed.shape[channel_axis] - base.n
+        if not 0 <= extra <= 2:
+            raise ValueError(
+                f"buffer carries {packed.shape[channel_axis]} channels; an "
+                f"n={base.n} base expects n, n+1 or n+2"
+            )
+        layout = (Layout.BASE, Layout.BASE_MA, Layout.RRNS)[extra]
+        return cls(packed, base, layout=layout, signed=signed,
+                   channel_axis=channel_axis,
+                   mb=mb if layout is Layout.RRNS else None)
+
+    @classmethod
+    def from_parts(cls, base: RNSBase, x, xa=None) -> "RnsArray":
+        """Lift the oldest convention: separate base residues ``x: (..., n)``
+        and (optionally) redundant residue ``xa: (...,)``."""
+        x = jnp.asarray(x)
+        if xa is None:
+            return cls(x, base, layout=Layout.BASE)
+        xa = jnp.asarray(xa)
+        return cls(
+            jnp.concatenate([x, xa[..., None].astype(x.dtype)], axis=-1),
+            base, layout=Layout.BASE_MA,
+        )

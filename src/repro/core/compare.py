@@ -30,11 +30,10 @@ from .mrc import mrc, mrc_unrolled, mrs_ge
 __all__ = ["rns_compare_ge", "classic_compare_ge", "approx_crt_ge", "compare_packed_ge"]
 
 
-def rns_compare_ge(base: RNSBase, x1, xa1, x2, xa2, *, unroll: bool = False):
-    """Algorithm 1.  All args batched: x*: (..., n), xa*: (...,).
-
-    Returns a boolean tensor: True where N1 >= N2.
-    """
+def _compare_ge_impl(base: RNSBase, x1, xa1, x2, xa2, *, unroll: bool = False):
+    """Algorithm 1, pure jnp — the implementation ``RnsArray.compare_ge``
+    routes to on the jnp backend (the pallas backend takes the fused kernel
+    in kernels/rns_compare.py instead)."""
     ma = base.ma
     delta_p = jnp.mod(xa1 - xa2, ma)                 # line 1
     z = arith.sub(base, x1, x2)                      # line 2
@@ -43,13 +42,34 @@ def rns_compare_ge(base: RNSBase, x1, xa1, x2, xa2, *, unroll: bool = False):
     return delta == delta_p                          # lines 5-9 (Thm. 1)
 
 
+def rns_compare_ge(base: RNSBase, x1, xa1, x2, xa2, *, unroll: bool = False):
+    """Algorithm 1.  All args batched: x*: (..., n), xa*: (...,).
+
+    Returns a boolean tensor: True where N1 >= N2.
+
+    Legacy shim: lifts the separate (x, xa) argument pairs into ``RnsArray``
+    and compares there — prefer ``RnsArray.from_parts(base, x, xa)`` and the
+    ``>=`` operator directly (core/array.py).
+    """
+    from .array import RnsArray
+
+    a = RnsArray.from_parts(base, x1, xa1)
+    b = RnsArray.from_parts(base, x2, xa2)
+    return a.compare_ge(b, unroll=unroll)
+
+
 def compare_packed_ge(base: RNSBase, p1, p2, *, unroll: bool = True):
     """Alg. 1 on 'packed' tensors (..., n+1) whose last channel is the
     redundant residue.  This is the layout the gradient codec carries so the
-    redundant channel rides along through every ring op."""
-    return rns_compare_ge(
-        base, p1[..., :-1], p1[..., -1], p2[..., :-1], p2[..., -1], unroll=unroll
-    )
+    redundant channel rides along through every ring op.
+
+    Legacy shim over ``RnsArray.from_packed(...).compare_ge(...)``.
+    """
+    from .array import RnsArray
+
+    a = RnsArray.from_packed(base, p1[..., : base.n + 1])
+    b = RnsArray.from_packed(base, p2[..., : base.n + 1])
+    return a.compare_ge(b, unroll=unroll)
 
 
 def classic_compare_ge(base: RNSBase, x1, x2, *, unroll: bool = False):

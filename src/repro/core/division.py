@@ -8,6 +8,8 @@ sum — all moduli odd ⇒ beta_i ≡ 1 mod 2 ⇒ X mod 2 = sum a_i mod 2).
 
 Operands travel as *packed* tensors (..., n+1) — base residues plus the
 redundant m_a channel — so comparisons never need a fresh conversion.
+The typed frontend is ``RnsArray.divmod`` / ``.halve`` / ``.scale_pow2``
+(core/array.py); the public functions here are legacy shims over it.
 
 Wrap discipline: doubling D inside the ring wraps mod M once D·2^j >= M.
 A wrapped rung of the ladder would compare arbitrarily, so the up-phase
@@ -21,7 +23,7 @@ import jax.numpy as jnp
 
 from . import arith
 from .base import RNSBase
-from .compare import compare_packed_ge
+from .compare import _compare_ge_impl
 from .mrc import mrc
 
 __all__ = ["pack", "unpack", "divmod_rns", "halve", "scale_pow2", "parity"]
@@ -47,30 +49,52 @@ def psub(base, p, q):
     return pack(base, x, xa)
 
 
+def _packed_ge(base, p, q):
+    return _compare_ge_impl(
+        base, p[..., :-1], p[..., -1], q[..., :-1], q[..., -1], unroll=True
+    )
+
+
 def parity(base: RNSBase, x):
     """X mod 2 from base residues (all moduli odd)."""
     return jnp.mod(jnp.sum(mrc(base, x), axis=-1), 2)
 
 
-def halve(base: RNSBase, packed):
-    """Exact floor(X/2): subtract the parity bit, multiply by 2^{-1}."""
-    x, xa = unpack(packed)
-    p = parity(base, x).astype(x.dtype)
+def _halve_impl(base: RNSBase, buf, red_moduli: tuple[int, ...]):
+    """Exact floor(X/2) over a channels-last buffer ``(..., n + k)`` whose
+    trailing k channels carry the ``red_moduli`` redundant residues
+    (k = 0, 1 or 2): subtract the parity bit, multiply by 2^{-1} — per
+    channel, each in its own modulus."""
+    n = base.n
+    x, extra = buf[..., :n], buf[..., n:]
+    p = parity(base, x).astype(buf.dtype)
     x = arith.sub(base, x, jnp.broadcast_to(p[..., None], x.shape))
-    xa = jnp.mod(xa - p, base.ma)
     x = arith.mul_const(base, x, base.inv2_np)
-    xa = jnp.mod(xa * base.inv2_ma, base.ma)
-    return pack(base, x, xa)
+    cols = [x]
+    for i, mr in enumerate(red_moduli):
+        xr = jnp.mod(extra[..., i] - p, mr)
+        cols.append(jnp.mod(xr * pow(2, -1, mr), mr)[..., None]
+                    .astype(buf.dtype))
+    return jnp.concatenate(cols, axis=-1) if red_moduli else x
+
+
+def halve(base: RNSBase, packed):
+    """Exact floor(X/2) on a packed (..., n+1) tensor.  Legacy shim over
+    ``RnsArray.halve``."""
+    from .array import RnsArray
+
+    return RnsArray.from_packed(base, packed).halve().to_packed()
 
 
 def scale_pow2(base: RNSBase, packed, k: int):
-    """floor(X / 2^k) — the paper's 'scaling' application, k exact halvings."""
-    for _ in range(k):
-        packed = halve(base, packed)
-    return packed
+    """floor(X / 2^k) — the paper's 'scaling' application, k exact halvings.
+    Legacy shim over ``RnsArray.scale_pow2``."""
+    from .array import RnsArray
+
+    return RnsArray.from_packed(base, packed).scale_pow2(k).to_packed()
 
 
-def divmod_rns(base: RNSBase, xp, dp, *, iters: int | None = None):
+def _divmod_impl(base: RNSBase, xp, dp, *, iters: int | None = None):
     """(Q, R) with X = Q*D + R, 0 <= R < D, entirely in RNS.
 
     Restoring division.  Up-phase builds the ladder d·2^j (j = 0..nbits) with
@@ -86,7 +110,7 @@ def divmod_rns(base: RNSBase, xp, dp, *, iters: int | None = None):
         d, valid = carry
         d2 = padd(base, d, d)
         # 2d >= d holds iff no wrap (wrapped value is 2d - M < d).
-        valid2 = valid & compare_packed_ge(base, d2, d)
+        valid2 = valid & _packed_ge(base, d2, d)
         return (d2, valid2), (d2, valid2)
 
     valid0 = jnp.ones(xp.shape[:-1], dtype=bool)
@@ -100,7 +124,7 @@ def divmod_rns(base: RNSBase, xp, dp, *, iters: int | None = None):
     def down(carry, rung):
         q, r = carry
         d_j, valid_j = rung
-        bit = compare_packed_ge(base, r, d_j) & valid_j
+        bit = _packed_ge(base, r, d_j) & valid_j
         bitx = bit[..., None]
         r = jnp.where(bitx, psub(base, r, d_j), r)
         # Q = 2Q + bit  (Horner over the quotient bits, in RNS).
@@ -113,6 +137,19 @@ def divmod_rns(base: RNSBase, xp, dp, *, iters: int | None = None):
         down, (zero, xp), (ladder[::-1], valids[::-1])
     )
     return q, r
+
+
+def divmod_rns(base: RNSBase, xp, dp, *, iters: int | None = None):
+    """(Q, R) on packed (..., n+1) operands.  Legacy shim over
+    ``RnsArray.divmod`` (which adds layout checks and the typed result)."""
+    from .array import RnsArray
+
+    if iters is not None:  # expert knob not exposed on the typed API
+        return _divmod_impl(base, xp, dp, iters=iters)
+    q, r = RnsArray.from_packed(base, xp).divmod(
+        RnsArray.from_packed(base, dp)
+    )
+    return q.to_packed(), r.to_packed()
 
 
 def _one_like(base: RNSBase, packed):

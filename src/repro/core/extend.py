@@ -23,12 +23,20 @@ from .mrc import mrc
 __all__ = ["extend_mrc", "extend_shenoy", "extend_kawamura"]
 
 
+def _extend_mrc_impl(base: RNSBase, x, targets: tuple[int, ...]):
+    """MRC + multi-target Alg.-3 dot — the jnp route of
+    ``RnsArray.extend`` (the pallas backend swaps in the kernel MRC)."""
+    return mrs_dot_mod(base, mrc(base, x), targets)
+
+
 def extend_mrc(base: RNSBase, x, targets: tuple[int, ...]):
     """Exact extension of ``x: (..., n)`` to residues mod each target, (..., T).
 
     This is also the reconstruction step of the RRNS single-fault repair
     (DESIGN.md §10): the corrected residue of a located channel is the
     surviving channels' value extended back to that channel's modulus.
+
+    Legacy shim over ``RnsArray.extend``.
 
     >>> import jax.numpy as jnp
     >>> from repro.core.base import RNSBase
@@ -38,7 +46,9 @@ def extend_mrc(base: RNSBase, x, targets: tuple[int, ...]):
     >>> extend_mrc(base, x, (11, 13)).tolist()       # 52 mod 11, 52 mod 13
     [[8, 0]]
     """
-    return mrs_dot_mod(base, mrc(base, x), targets)
+    from .array import RnsArray
+
+    return RnsArray.from_parts(base, x).extend(tuple(targets))
 
 
 def _xi(base: RNSBase, x):

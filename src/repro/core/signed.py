@@ -8,18 +8,21 @@ A signed v with |v| < M/2 embeds as X = v mod M.  Then:
 so *sign detection costs exactly one comparison* — one MRC — instead of a
 full reconstruction.  This is the primitive the gradient codec uses for
 overflow checks and magnitude clipping (DESIGN.md §4).
+
+The typed frontend is ``RnsArray.encode_signed`` / ``.is_negative`` /
+``.abs_ge`` (core/array.py); the public functions here are legacy shims.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from .base import RNSBase
-from .compare import rns_compare_ge
+from .compare import _compare_ge_impl
 
 __all__ = ["encode_signed", "is_negative", "abs_ge_threshold"]
 
 
-def encode_signed(base: RNSBase, v):
+def _encode_signed_impl(base: RNSBase, v):
     """Signed int tensor -> packed residue tensor (..., n+1), last = m_a."""
     from .convert import tensor_to_rns
 
@@ -32,17 +35,17 @@ def encode_signed(base: RNSBase, v):
     return jnp.concatenate([res, xa[..., None].astype(res.dtype)], axis=-1)
 
 
-def is_negative(base: RNSBase, packed):
+def _is_negative_impl(base: RNSBase, packed):
     """True where the packed value encodes v < 0.  One Alg.-1 comparison."""
     x, xa = packed[..., :-1], packed[..., -1]
     t = jnp.asarray(base.half_M_residues, dtype=x.dtype)
     t = jnp.broadcast_to(t, x.shape)
     ta = jnp.asarray(base.half_M_ma, dtype=xa.dtype)
     ta = jnp.broadcast_to(ta, xa.shape)
-    return rns_compare_ge(base, x, xa, t, ta, unroll=True)  # X >= ceil(M/2)
+    return _compare_ge_impl(base, x, xa, t, ta, unroll=True)  # X >= ceil(M/2)
 
 
-def abs_ge_threshold(base: RNSBase, packed, thr: int):
+def _abs_ge_impl(base: RNSBase, packed, thr: int):
     """True where |v| >= thr (0 < thr < M/2).  Two Alg.-1 comparisons:
 
         v >= 0:  X >= thr
@@ -53,9 +56,34 @@ def abs_ge_threshold(base: RNSBase, packed, thr: int):
     def cmp_const(c: int):
         cr = jnp.broadcast_to(jnp.asarray(base.residues_of(c), dtype=x.dtype), x.shape)
         ca = jnp.broadcast_to(jnp.asarray(c % base.ma, dtype=xa.dtype), xa.shape)
-        return rns_compare_ge(base, x, xa, cr, ca, unroll=True)
+        return _compare_ge_impl(base, x, xa, cr, ca, unroll=True)
 
-    neg = is_negative(base, packed)
+    neg = _is_negative_impl(base, packed)
     ge_thr = cmp_const(thr)                    # pos case: X >= thr
     ge_mirror = cmp_const(base.M - thr + 1)    # neg case: X > M - thr fails
     return jnp.where(neg, ~ge_mirror, ge_thr)
+
+
+# ------------------------------------------------------------ legacy shims
+def encode_signed(base: RNSBase, v):
+    """Signed int tensor -> packed residue tensor (..., n+1), last = m_a.
+    Legacy shim over ``RnsArray.encode_signed``."""
+    from .array import RnsArray
+
+    return RnsArray.encode_signed(base, v).to_packed()
+
+
+def is_negative(base: RNSBase, packed):
+    """True where the packed value encodes v < 0.  Legacy shim over
+    ``RnsArray.is_negative``."""
+    from .array import RnsArray
+
+    return RnsArray.from_packed(base, packed, signed=True).is_negative()
+
+
+def abs_ge_threshold(base: RNSBase, packed, thr: int):
+    """True where |v| >= thr (0 < thr < M/2).  Legacy shim over
+    ``RnsArray.abs_ge``."""
+    from .array import RnsArray
+
+    return RnsArray.from_packed(base, packed, signed=True).abs_ge(thr)

@@ -51,14 +51,24 @@ def repair_packed(codec, packed, *, wraps: int = 0,
     corruption (left untouched — those still need the ``find_restorable``
     rollback path).  A clean buffer returns bitwise-unchanged with both
     counts zero.
+
+    ``packed`` may also be a typed ``RnsArray`` (core/array.py) — its own
+    channel axis then wins over ``channel_major``, and the repaired buffer
+    comes back typed.
     """
-    buf = packed.T if channel_major else packed
-    fixed, fault = codec.correct_packed(buf, wraps=wraps)
+    from repro.core.array import RnsArray
+
+    if isinstance(packed, RnsArray):
+        fixed, fault = codec.correct_packed(packed, wraps=wraps)
+    else:
+        buf = packed.T if channel_major else packed
+        fixed, fault = codec.correct_packed(buf, wraps=wraps)
+        fixed = fixed.T if channel_major else fixed
     report = {
         "repaired": int(jnp.sum(fault >= 0)),
         "unrecoverable": int(jnp.sum(fault == -2)),
     }
-    return (fixed.T if channel_major else fixed), report
+    return fixed, report
 
 
 def tensor_fingerprint(arr) -> str:

@@ -30,6 +30,12 @@ Layouts — two appear throughout this module and the kernels:
   the kernels' native tile layout and the wire format of the bucketed
   transport (each row all-reduces as an independent int32 stream).
 
+Both lift into the typed frontend ``repro.core.RnsArray`` (layout BASE_MA
+for detect-only codecs, RRNS for locate-and-correct; ``channel_axis=0`` is
+the wire layout): ``encode_array``/``as_array`` construct it, every
+algebraic method here accepts it and returns it in kind, and the bucketed
+transport (``tree_pack_rns``/``rns_psum_tree``) carries it end-to-end.
+
 Transport comes in two granularities (DESIGN.md §9):
 
 * ``rns_psum``     — one tensor, one per-channel psum (the original path).
@@ -65,6 +71,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.core.array import Layout, RnsArray
 from repro.core.base import RNSBase, gen_coprime_moduli, make_base
 from repro.core.compare import compare_packed_ge
 from repro.core.convert import mrs_dot_mod, rns_to_tensor
@@ -72,7 +79,7 @@ from repro.core.mrc import mrc_unrolled, mrs_ge
 from repro.core.signed import abs_ge_threshold, encode_signed, is_negative
 
 __all__ = ["GradCodec", "rns_psum", "rns_psum_tree", "tree_pack",
-           "tree_decode"]
+           "tree_pack_rns", "tree_decode"]
 
 
 @functools.lru_cache(maxsize=None)
@@ -168,6 +175,37 @@ class GradCodec:
         return (self.base.ma,) if self.mb is None else (self.base.ma, self.mb)
 
     @property
+    def layout(self) -> Layout:
+        """The ``RnsArray`` layout this codec's buffers carry:
+        detect-only -> BASE_MA, locate-and-correct -> RRNS."""
+        return Layout.BASE_MA if self.mb is None else Layout.RRNS
+
+    def as_array(self, buf, *, channel_major: bool = False) -> RnsArray:
+        """Lift a raw packed codec buffer (leaf-major ``(..., n_channels)``
+        or wire-layout ``(n_channels, B)``) into a typed ``RnsArray``."""
+        return RnsArray.from_packed(
+            self.base, buf, signed=True, mb=self.mb,
+            channel_axis=0 if channel_major else -1,
+        )
+
+    def _split(self, p):
+        """(channels-last buffer, RnsArray-or-None) for dual-API methods."""
+        if isinstance(p, RnsArray):
+            return p.to_packed(), p
+        return p, None
+
+    @staticmethod
+    def _rejoin(buf_cl, proto):
+        """Rebuild the caller's type: RnsArray (matching ``proto``'s storage
+        layout) when the input was typed, the raw buffer otherwise."""
+        if proto is None:
+            return buf_cl
+        return RnsArray(
+            buf_cl, proto.base, layout=proto.layout, signed=proto.signed,
+            channel_axis=-1, mb=proto.mb,
+        ).with_channel_axis(proto.channel_axis)
+
+    @property
     def n_channels(self) -> int:
         """Total packed channels: n base + 1 or 2 redundant."""
         return self.base.n + len(self.redundant)
@@ -184,10 +222,24 @@ class GradCodec:
         True
         >>> GradCodec.make(world=2, n=4).use_fused   # M ~ 2**60: jnp path
         False
+
+        An explicit ``repro.core.backend(...)`` context overrides the
+        codec's own ``fused`` flag (read at trace time, DESIGN.md §11):
+        "jnp" forces the reference path, "pallas" opts qualifying bases in
+        even when the codec was built with ``fused=False``.
+
+        >>> from repro.core import backend
+        >>> with backend("jnp"):
+        ...     GradCodec.make(world=2).use_fused
+        False
         """
-        return (
-            self.fused and self.base.bits <= 15 and self.base.M < (1 << 45)
-        )
+        from repro.core.dispatch import get_backend
+
+        setting = get_backend()
+        if setting == "jnp":
+            return False
+        want = self.fused or setting == "pallas"
+        return want and self.base.bits <= 15 and self.base.M < (1 << 45)
 
     @property
     def qmax(self) -> int:
@@ -266,10 +318,32 @@ class GradCodec:
             return self.encode(jnp.ravel(g)).T
         return self.encode(g)
 
+    def encode_array(self, g, *, channel_major: bool = False) -> RnsArray:
+        """Typed transport-path encode: ``encode_packed`` lifted into an
+        ``RnsArray`` (layout BASE_MA or RRNS per the codec, ``signed=True``,
+        channel-major storage for the wire format).
+
+        >>> import jax.numpy as jnp
+        >>> from repro.dist.grad_codec import GradCodec
+        >>> arr = GradCodec.make(world=2, correct=True).encode_array(
+        ...     jnp.ones((6,)), channel_major=True)
+        >>> arr.layout.name, arr.residues.shape      # wire layout, typed
+        ('RRNS', (5, 6))
+        """
+        return self.as_array(
+            self.encode_packed(g, channel_major=channel_major),
+            channel_major=channel_major,
+        )
+
     def decode_summed(self, summed, *, channel_major: bool = False):
         """Transport-path decode of post-psum channel sums: fused
         fold->MRC->Horner->sign->scale kernel when ``use_fused`` else the
-        jnp fold+decode — bitwise-identical f32 either way."""
+        jnp fold+decode — bitwise-identical f32 either way.  ``summed`` may
+        be raw (``channel_major`` says which layout) or an ``RnsArray``
+        (layout read off the type)."""
+        if isinstance(summed, RnsArray):
+            channel_major = summed.channel_axis == 0
+            summed = summed.residues
         if self.use_fused:
             from repro.kernels import codec_decode_op
 
@@ -278,14 +352,19 @@ class GradCodec:
         return self.decode(folded)
 
     def fold(self, summed):
-        """Reduce per-channel sums back into canonical residues (< m_i)."""
+        """Reduce per-channel sums back into canonical residues (< m_i).
+        Accepts the raw packed buffer or an ``RnsArray`` (returned in
+        kind)."""
+        summed, proto = self._split(summed)
         m = jnp.asarray(
             tuple(self.base.moduli) + self.redundant, dtype=summed.dtype
         )
-        return jnp.mod(summed, m)
+        return self._rejoin(jnp.mod(summed, m), proto)
 
     def decode(self, folded):
-        """Folded packed tensor -> f32 values (exact up to the f32 cast)."""
+        """Folded packed tensor (raw or ``RnsArray``) -> f32 values (exact
+        up to the f32 cast)."""
+        folded, _ = self._split(folded)
         v = rns_to_tensor(self.base, folded[..., : self.base.n])
         half = (self.base.M + 1) // 2
         v = jnp.where(v >= half, v - self.base.M, v)
@@ -298,6 +377,7 @@ class GradCodec:
         """The (..., n+1) slice Algorithm-1 queries consume: base residues
         plus the m_a channel (the m_b channel, when present, is correction
         metadata and plays no part in comparisons)."""
+        folded, _ = self._split(folded)
         return folded[..., : self.base.n + 1]
 
     def is_negative(self, folded):
@@ -323,10 +403,13 @@ class GradCodec:
         NOTE: normalize overwrites the redundant channels from the base
         residues, so it forfeits their error-detection/correction power —
         run ``verify_packed`` / ``correct_packed`` BEFORE normalizing."""
+        folded, proto = self._split(folded)
         x = folded[..., : self.base.n]
         digits = mrc_unrolled(self.base, x)
         xr = mrs_dot_mod(self.base, digits, self.redundant)
-        return jnp.concatenate([x, xr.astype(x.dtype)], axis=-1)
+        return self._rejoin(
+            jnp.concatenate([x, xr.astype(x.dtype)], axis=-1), proto
+        )
 
     def verify_packed(self, folded):
         """Redundant-channel consistency check (transit corruption detector).
@@ -346,6 +429,7 @@ class GradCodec:
         Discriminating power requires ``world < m_a``: with more replicas
         than residues the offset family covers the whole group and every
         channel value is accepted (the check degenerates to always-True)."""
+        folded, _ = self._split(folded)
         x = folded[..., : self.base.n]
         digits = mrc_unrolled(self.base, x)
         recomputed = mrs_dot_mod(self.base, digits, self.redundant)
@@ -378,6 +462,7 @@ class GradCodec:
         the Alg.-3 extension of the reconstruction back to m_c as the
         replacement residue should c turn out to be the faulty one.
         """
+        folded, _ = self._split(folded)
         if self.mb is None:
             raise ValueError(
                 "fault location needs the second redundant modulus: build "
@@ -453,10 +538,12 @@ class GradCodec:
         >>> bool(jnp.all(fixed == buf))
         True
         """
+        folded, proto = self._split(folded)
         ok, fixes = self._fault_scan(folded, wraps)
         fault = self._verdict(ok)
         hit = fault[..., None] == jnp.arange(self.n_channels, dtype=jnp.int32)
-        return jnp.where(hit, fixes.astype(folded.dtype), folded), fault
+        fixed = jnp.where(hit, fixes.astype(folded.dtype), folded)
+        return self._rejoin(fixed, proto), fault
 
     def range_ok(self, p1, p2):
         """Packed-ge usable as an overflow guard: (p1 >= p2) per Alg. 1."""
@@ -516,14 +603,26 @@ def tree_pack(codec: GradCodec, grads):
     return codec.encode_packed(flat, channel_major=True), meta
 
 
+def tree_pack_rns(codec: GradCodec, grads):
+    """``tree_pack`` with a typed wire buffer: the whole grad pytree as ONE
+    channel-major ``RnsArray`` (layout BASE_MA/RRNS per the codec).  This is
+    what the train step carries between encode, fault repair, and the psum —
+    the repair path (``correct_packed``) and the optimizer-boundary decode
+    consume the type directly instead of transposing raw buffers."""
+    buf, meta = tree_pack(codec, grads)
+    return codec.as_array(buf, channel_major=True), meta
+
+
 def tree_decode(codec: GradCodec, summed, meta: _TreeMeta, denom=1.0):
-    """Post-psum channel-major ``(n_channels, B_total)`` sums -> grad pytree
-    / ``denom``.
+    """Post-psum channel-major ``(n_channels, B_total)`` sums (raw or
+    ``RnsArray``) -> grad pytree / ``denom``.
 
     Decode runs fused (one HBM round-trip) when the codec qualifies; the
     flat result is sliced back into leaves with ``meta``'s layout and cast
     to each leaf's original dtype.
     """
+    # decode_summed reads the layout off RnsArray inputs itself; the kwarg
+    # only matters for raw buffers
     flat = codec.decode_summed(summed, channel_major=True) / denom
     leaves, off = [], 0
     for shape, dtype, size in zip(meta.shapes, meta.dtypes, meta.sizes):
@@ -535,12 +634,13 @@ def tree_decode(codec: GradCodec, summed, meta: _TreeMeta, denom=1.0):
 def rns_psum_tree(codec: GradCodec, grads, axis_name: str):
     """Exact mean-gradient all-reduce of an ENTIRE pytree in one collective.
 
-    tree_pack -> one per-channel int32 psum over the channel-major bucket
-    -> fused decode -> unflatten.  Exactness is per element, so bucketing
-    changes nothing semantically — it only amortizes collective latency
-    that the per-leaf path pays once per tensor.
+    tree_pack_rns -> one per-channel int32 psum over the channel-major
+    ``RnsArray`` bucket (a pytree with one int32 leaf, so the psum is still
+    a single collective) -> fused decode -> unflatten.  Exactness is per
+    element, so bucketing changes nothing semantically — it only amortizes
+    collective latency that the per-leaf path pays once per tensor.
     """
-    buf, meta = tree_pack(codec, grads)
-    summed = jax.lax.psum(buf, axis_name)  # the ONLY collective
+    arr, meta = tree_pack_rns(codec, grads)
+    summed = jax.lax.psum(arr, axis_name)  # the ONLY collective
     nd = jax.lax.psum(1.0, axis_name)      # folds to a constant at trace
     return tree_decode(codec, summed, meta, denom=nd)

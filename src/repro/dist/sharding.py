@@ -209,8 +209,20 @@ def cache_specs(cache_abs, mesh):
             entries[extra + b_ax] = (
                 data_axes[0] if len(data_axes) == 1 else data_axes
             )
-        if m_ax is not None and model > 1 and leaf.shape[extra + m_ax] % model == 0:
-            entries[extra + m_ax] = "model"
+        if m_ax is not None and model > 1:
+            if leaf.shape[extra + m_ax] % model == 0:
+                entries[extra + m_ax] = "model"
+            elif canon == 4 and leaf.shape[extra + 1] % model == 0:
+                # KV heads don't divide the model axis (GQA with few KV
+                # heads, e.g. 8 heads on a 16-wide axis): shard the SEQUENCE
+                # axis of the (b, S, g, hd) cache instead.  Attention over a
+                # seq-sharded cache partitions as partial scores + the
+                # softmax-stat reductions XLA inserts; the decode-step
+                # cache update at a dynamic position lowers to a
+                # shard-local dynamic-update-slice.  Without this fallback
+                # such caches replicate over the whole model axis — 16x the
+                # HBM for the dominant decode buffer.
+                entries[extra + 1] = "model"
         return P(*entries)
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache_abs)

@@ -5,17 +5,26 @@ These present the same (..., n) channel-minor API as repro.core, and handle:
   * padding: batch padded to the block size (pad values are benign — every
     kernel is elementwise/per-column in batch),
   * dispatch: ``interpret=True`` automatically off-TPU so the same call site
-    runs the Mosaic kernel on TPU and the Python interpreter on CPU,
+    runs the Mosaic kernel on TPU and the Python interpreter on CPU — the
+    default comes from the ONE resolver in core/dispatch.py
+    (``interpret_default``), shared by every op here,
   * constraints: kernels require 15-bit (int32-lane) bases; wider bases fall
     back to the pure-jnp core implementations.
+
+Every op also accepts ``RnsArray`` operands directly (core/array.py): pass
+the typed array in place of the ``base, x[, xa]`` argument group and the
+wrapper pulls the buffers/layout out itself.  ``modmul_op`` on packed
+layouts then runs the kernel over ALL channels (each row reduces in its own
+modulus — redundant channels included) and returns an ``RnsArray``.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.array import RnsArray
 from repro.core.base import RNSBase
+from repro.core.dispatch import interpret_default as _interpret_default
 
 from .modmul import modmul_kernel_call
 from .mrc import mrc_kernel_call
@@ -23,10 +32,6 @@ from .rns_compare import compare_kernel_call
 
 __all__ = ["mrc_op", "modmul_op", "compare_op", "codec_encode_op",
            "codec_decode_op"]
-
-
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _flatten_batch(x):
@@ -54,8 +59,14 @@ def _tables(base: RNSBase):
     return inv_t, m_col
 
 
-def mrc_op(base: RNSBase, x, *, block_b: int = 512, interpret: bool | None = None):
-    """Mixed-radix digits of ``x: (..., n)`` via the Pallas kernel."""
+def mrc_op(base, x=None, *, block_b: int = 512, interpret: bool | None = None):
+    """Mixed-radix digits of ``x: (..., n)`` via the Pallas kernel.
+
+    Also callable as ``mrc_op(arr)`` with an ``RnsArray`` — digits of the
+    base channels, channels-last.
+    """
+    if isinstance(base, RnsArray):
+        base, x = base.base, base.x
     interpret = _interpret_default() if interpret is None else interpret
     inv_t, m_col = _tables(base)
     flat, lead = _flatten_batch(x.astype(jnp.int32))
@@ -65,26 +76,63 @@ def mrc_op(base: RNSBase, x, *, block_b: int = 512, interpret: bool | None = Non
     return out[:, :B].T.reshape(*lead, base.n).astype(x.dtype)
 
 
-def modmul_op(base: RNSBase, x, y, *, block_b: int = 1024, interpret: bool | None = None):
-    """Channel-wise (x * y) mod m_i via the Pallas kernel."""
+def modmul_op(base, x=None, y=None, *, block_b: int = 1024,
+              interpret: bool | None = None):
+    """Channel-wise (x * y) mod m_i via the Pallas kernel.
+
+    Also callable as ``modmul_op(a, b)`` with two ``RnsArray`` operands of
+    matching base/layout: the kernel then reduces EVERY channel in its own
+    modulus (redundant rows included) and the result comes back typed.
+    """
+    arr = None
+    if isinstance(base, RnsArray):
+        arr, other = base, x
+        if not isinstance(other, RnsArray):
+            raise TypeError("modmul_op(a, b) needs both operands as RnsArray")
+        other = arr._lift(other)  # validates matching base/layout/mb
+        if arr.base.bits > 15:
+            raise ValueError("Pallas kernels require bits<=15 (int32 lanes)")
+        m_col = jnp.asarray(arr.channel_moduli[:, None], dtype=jnp.int32)
+        x, y = arr.to_packed(), other.to_packed()
+        nch = arr.n_channels
+        base = arr.base
+    else:
+        _, m_col = _tables(base)
+        nch = base.n
     interpret = _interpret_default() if interpret is None else interpret
-    _, m_col = _tables(base)
     fx, lead = _flatten_batch(x.astype(jnp.int32))
     fy, _ = _flatten_batch(y.astype(jnp.int32))
     xt, B = _pad_to(fx.T, block_b, axis=1)
     yt, _ = _pad_to(fy.T, block_b, axis=1)
     block_b = min(block_b, xt.shape[1])
     out = modmul_kernel_call(xt, yt, m_col, block_b=block_b, interpret=interpret)
-    return out[:, :B].T.reshape(*lead, base.n).astype(x.dtype)
+    out = out[:, :B].T.reshape(*lead, nch).astype(x.dtype)
+    if arr is not None:
+        return RnsArray(
+            out, base, layout=arr.layout,
+            signed=arr.signed or other.signed, channel_axis=-1, mb=arr.mb,
+        ).with_channel_axis(arr.channel_axis)
+    return out
 
 
 def compare_op(
-    base: RNSBase, x1, xa1, x2, xa2, *, block_b: int = 512, interpret: bool | None = None
+    base, x1=None, xa1=None, x2=None, xa2=None, *, block_b: int = 512,
+    interpret: bool | None = None
 ):
     """Fused Algorithm 1: boolean (N1 >= N2) for batched operands.
 
     x1, x2: (..., n); xa1, xa2: (...,).
+
+    Also callable as ``compare_op(a, b)`` with two ``RnsArray`` operands
+    (BASE_MA or RRNS layout — the m_a channel drives Theorem 1).
     """
+    if isinstance(base, RnsArray):
+        a, b = base, x1
+        if not isinstance(b, RnsArray):
+            raise TypeError("compare_op(a, b) needs both operands as "
+                            "RnsArray")
+        b = a._lift(b)  # validates matching base/layout/mb
+        base, x1, xa1, x2, xa2 = a.base, a.x, a.xa, b.x, b.xa
     interpret = _interpret_default() if interpret is None else interpret
     inv_t, m_col = _tables(base)
     betas_col = jnp.asarray(base.betas_ma_np[:, None], dtype=jnp.int32)

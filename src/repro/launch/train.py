@@ -37,7 +37,9 @@ def _corrupt_wire(codec):
     smoke demo; the repair half must undo it exactly)."""
     m0 = int(codec.base.moduli[0])
 
-    def hook(buf):  # channel-major (n_channels, B)
+    def hook(buf):
+        # raw channel-major (n_channels, B) residues of the RnsArray wire
+        # buffer (train_step unwraps/rewraps the type around the hook)
         return buf.at[0, 0].set(jnp.mod(buf[0, 0] + 1, m0))
 
     return hook

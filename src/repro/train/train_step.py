@@ -116,26 +116,32 @@ def make_train_step(
                 opt_cfg, params, grads, opt_state
             )
         else:
-            from repro.dist.grad_codec import tree_decode, tree_pack
+            import dataclasses
 
-            buf, meta = tree_pack(rns_codec, grads)
-            if transport_hook is not None:  # fault-injection seam
-                buf = transport_hook(buf)
+            from repro.dist.grad_codec import tree_decode, tree_pack_rns
+
+            # the wire buffer travels TYPED: one channel-major RnsArray
+            # (layout BASE_MA/RRNS per the codec) from encode through
+            # repair, psum, and the optimizer-boundary decode
+            wire, meta = tree_pack_rns(rns_codec, grads)
+            if transport_hook is not None:  # fault-injection seam (raw)
+                wire = dataclasses.replace(
+                    wire, residues=transport_hook(wire.residues)
+                )
             repaired = unrepairable = None
             if rns_repair:
-                # RRNS locate-and-correct on the local channel-major wire
-                # buffer: fresh encodings (wraps=0), so single-channel
-                # location is exact and the repaired buffer enters the psum
-                # as if the corruption never happened
-                fixed, fault = rns_codec.correct_packed(buf.T)
-                buf = fixed.T
+                # RRNS locate-and-correct on the local wire array: fresh
+                # encodings (wraps=0), so single-channel location is exact
+                # and the repaired buffer enters the psum as if the
+                # corruption never happened
+                wire, fault = rns_codec.correct_packed(wire)
                 repaired = jax.lax.psum(
                     jnp.sum(fault >= 0).astype(jnp.int32), rns_axis
                 )
                 unrepairable = jax.lax.psum(
                     jnp.sum(fault == -2).astype(jnp.int32), rns_axis
                 )
-            summed = jax.lax.psum(buf, rns_axis)  # the ONLY grad collective
+            summed = jax.lax.psum(wire, rns_axis)  # the ONLY grad collective
             nd = jax.lax.psum(1.0, rns_axis)      # trace-time constant
             params, opt_state, gnorm = adamw_update(
                 opt_cfg, params, summed, opt_state,

@@ -18,6 +18,8 @@ ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 # attributes (repro.core.mrc the module vs mrc the function).
 DOCTEST_MODULES = (
     "repro.dist.grad_codec",
+    "repro.core.array",
+    "repro.core.dispatch",
     "repro.core.mrc",
     "repro.core.extend",
 )
