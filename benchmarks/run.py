@@ -15,9 +15,11 @@ additionally writes the same rows as machine-readable JSON (default
   codec_correct        RRNS detect vs locate-and-correct cost + wire tax
   rns_array_api        typed RnsArray frontend vs legacy dispatch (~0 cost)
   division_scaling     comparison-driven divmod / scaling costs
+  serve_batching       continuous batching vs one-at-a-time serving
 
-``--json`` also splits the ``rns_array_*`` rows into BENCH_api.json so the
-typed-API overhead has its own tracked artifact.
+``--json`` also splits the ``rns_array_*`` rows into BENCH_api.json and the
+``serve_*`` rows into BENCH_serve.json so the typed-API overhead and the
+serving latency/throughput trajectory each have their own tracked artifact.
 """
 from __future__ import annotations
 
@@ -398,6 +400,52 @@ def rns_array_api():
     emit("rns_array_divmod_legacy", t_leg, "batch=8")
 
 
+# --------------------------------------------------------------- serving
+SERVE_REQS = 8
+
+
+def serve_batching():
+    """Continuous batching (DESIGN.md §12) vs one-at-a-time serving on the
+    smoke config: same workload (Poisson arrivals at tick rate 0.5), one
+    engine with 4 slots vs a single-slot engine that can never overlap
+    requests.  Rows land in BENCH_serve.json for trend tracking; tick
+    latencies are deterministic, tok/s is this host's CPU."""
+    from repro.configs import get_config
+    from repro.launch.serve import simulate, synth_requests
+    from repro.models import init_params
+    from repro.serve.batcher import ContinuousBatcher
+
+    cfg = get_config("gemma-2b").smoke()
+    params = init_params(cfg, jax.random.key(0))
+
+    def workload():
+        rng = np.random.default_rng(12)
+        return synth_requests(SERVE_REQS, rng, cfg.vocab, prompt_mean=8,
+                              max_new=8, arrival_rate=0.5)
+
+    def run(n_slots):
+        eng = ContinuousBatcher(cfg, params, n_slots=n_slots, cache_len=32,
+                                prefill_chunk=8)
+        simulate(eng, workload())        # warmup: compile + one full pass
+        n_warm = len(eng.sched.completed)
+        t0 = time.perf_counter()
+        counters = simulate(eng, workload())
+        wall = time.perf_counter() - t0
+        done = eng.sched.completed[n_warm:]  # only the timed pass counts
+        toks = sum(len(r.out) for r in done)
+        lat = float(np.mean([r.t_done - r.arrival for r in done]))
+        return toks / wall, lat, counters["max_concurrency"]
+
+    tokps_b, lat_b, conc = run(4)
+    tokps_s, lat_s, _ = run(1)
+    emit("serve_batched_tokps", 1e6 / tokps_b,
+         f"tok_per_s={tokps_b:.1f},max_concurrency={conc}")
+    emit("serve_solo_tokps", 1e6 / tokps_s, f"tok_per_s={tokps_s:.1f}")
+    emit("serve_batching_speedup", 0,
+         f"throughput_x={tokps_b/tokps_s:.2f},"
+         f"latency_ticks_batched={lat_b:.1f},solo={lat_s:.1f}")
+
+
 # --------------------------------------------------------- division/scaling
 def division_scaling():
     base = make_base(4, bits=8)
@@ -427,12 +475,14 @@ TABLES = [
     grad_codec_allreduce,
     codec_correct,
     rns_array_api,
+    serve_batching,
     division_scaling,
 ]
 
 
 def main(argv=None) -> None:
-    global NS, KERNEL_NS, MRC_NS, BATCH, ALLREDUCE_SIZES, EXT_TRIALS
+    global NS, KERNEL_NS, MRC_NS, BATCH, ALLREDUCE_SIZES, EXT_TRIALS, \
+        SERVE_REQS
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", nargs="?", const="BENCH_codec.json",
                     default=None, metavar="PATH",
@@ -440,6 +490,10 @@ def main(argv=None) -> None:
     ap.add_argument("--json-api", default="BENCH_api.json", metavar="PATH",
                     help="with --json: where the rns_array_* rows (typed-API "
                          "dispatch overhead) are additionally written")
+    ap.add_argument("--json-serve", default="BENCH_serve.json", metavar="PATH",
+                    help="with --json: where the serve_* rows (continuous-"
+                         "batching latency/throughput) are additionally "
+                         "written")
     ap.add_argument("--small", action="store_true",
                     help="CI smoke sizes: trimmed sweeps, same coverage")
     args = ap.parse_args(argv)
@@ -450,6 +504,7 @@ def main(argv=None) -> None:
         BATCH = 256
         ALLREDUCE_SIZES = (1 << 12,)
         EXT_TRIALS = 64
+        SERVE_REQS = 4
     print("name,us_per_call,derived")
     for fn in TABLES:
         fn()
@@ -462,6 +517,11 @@ def main(argv=None) -> None:
         with open(args.json_api, "w") as f:
             json.dump(api_rows, f, indent=1, sort_keys=True)
         print(f"# wrote {len(api_rows)} rows to {args.json_api}")
+        serve_rows = {k: v for k, v in RESULTS.items()
+                      if k.startswith("serve_")}
+        with open(args.json_serve, "w") as f:
+            json.dump(serve_rows, f, indent=1, sort_keys=True)
+        print(f"# wrote {len(serve_rows)} rows to {args.json_serve}")
 
 
 if __name__ == "__main__":

@@ -1,76 +1,307 @@
-"""Serving driver: prefill a batched prompt, decode tokens, report rates.
+"""Continuous-batching serving driver (DESIGN.md §12).
 
-    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
-        --batch 4 --prompt 32 --decode 16
+Drives ``repro.serve.ContinuousBatcher`` over a request workload — either
+synthetic (``--requests N`` with Poisson arrivals) or replayed from a
+workload file (``--trace FILE``) — and reports latency/throughput.  The
+simulation clock is DECODE-STEP TICKS (one persistent batched decode step
+per tick), so every latency number is deterministic for a given seed;
+wall-clock throughput is reported separately.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b \
+        --requests 8 --slots 4 --arrival-rate 0.5 --report serve_report.json
+
+Workload file format (JSON lines, one request per line)::
+
+    {"rid": 0, "prompt": [3, 1, 4], "max_new": 16, "eos": 7, "arrival": 0.0}
+
+``prompt`` may be replaced by ``"prompt_len": N`` to synthesize N random
+token ids from ``--seed``.  ``--save-trace`` writes the (possibly
+synthetic) workload back out in this format so a run is replayable.
+
+Smoke flags: ``--smoke`` (the DEFAULT: shrink the arch to the CPU-sized
+config) and ``--no-smoke`` (run the full published config) are an explicit
+pair over one setting — exactly one applies, and the help text of each
+names the default.
+
+``--rns-verify`` arms the engine's RnsArray cache-integrity fingerprints
+(verified at every retirement); ``--inject-wire-corrupt`` additionally
+corrupts one stored wire buffer after the run and demonstrates the
+detect -> ``repair_packed`` -> re-verify loop in the report.
+
+Families the batcher gates out (ssm/hybrid/encdec/vlm) fall back to a
+single-shot sequential loop (``report["engine"] == "single-shot"``) so
+every arch in the zoo stays servable; ``--rns-verify`` requires the slot
+engine and raises for them.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import math
 import time
+from collections import Counter
+
+import numpy as np
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 import repro  # noqa: F401
 from repro.configs import get_config
-from repro.models import decode_step, init_params, prefill
+from repro.models import init_params
+from repro.serve.batcher import ContinuousBatcher
+from repro.serve.scheduler import Request
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
+def load_trace(path: str, rng, vocab: int) -> list:
+    """Parse a JSONL workload file into Requests (see module docstring)."""
+    reqs = []
+    with open(path) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            d = json.loads(line)
+            prompt = d.get("prompt")
+            if prompt is None:
+                plen = int(d["prompt_len"])
+                prompt = [int(t) for t in rng.integers(1, vocab, plen)]
+            reqs.append(Request(
+                rid=int(d.get("rid", i)), prompt=[int(t) for t in prompt],
+                max_new=int(d["max_new"]), eos=d.get("eos"),
+                arrival=float(d.get("arrival", 0.0)),
+            ))
+    if not reqs:
+        raise ValueError(f"workload file {path} holds no requests")
+    counts = Counter(r.rid for r in reqs)
+    dups = sorted(r for r, n in counts.items() if n > 1)
+    if dups:
+        # the engine keys per-request verify state on rid
+        raise ValueError(f"workload file {path}: duplicate rids {dups}")
+    return reqs
+
+
+def synth_requests(n: int, rng, vocab: int, *, prompt_mean: int,
+                   max_new: int, arrival_rate: float) -> list:
+    """Synthetic workload: geometric-ish prompt lengths around
+    ``prompt_mean`` and Poisson arrivals at ``arrival_rate`` requests per
+    decode-step tick (rate 0 = everything arrives at t=0)."""
+    t = 0.0
+    reqs = []
+    for i in range(n):
+        if arrival_rate > 0:
+            t += float(rng.exponential(1.0 / arrival_rate))
+        plen = max(1, int(rng.poisson(prompt_mean)))
+        reqs.append(Request(
+            rid=i, prompt=[int(x) for x in rng.integers(1, vocab, plen)],
+            max_new=max_new, arrival=t,
+        ))
+    return reqs
+
+
+def save_trace(path: str, reqs: list) -> None:
+    with open(path, "w") as f:
+        for r in reqs:
+            f.write(json.dumps({
+                "rid": r.rid, "prompt": r.prompt, "max_new": r.max_new,
+                "eos": r.eos, "arrival": r.arrival,
+            }) + "\n")
+
+
+def _stats(xs: list) -> dict:
+    if not xs:
+        return {"mean": 0.0, "p50": 0.0, "p95": 0.0}
+    a = np.asarray(xs, np.float64)
+    return {"mean": float(a.mean()), "p50": float(np.percentile(a, 50)),
+            "p95": float(np.percentile(a, 95))}
+
+
+def simulate_single_shot(cfg, params, reqs: list, rng) -> tuple:
+    """Sequential one-request-at-a-time serving for the families the
+    continuous batcher gates out (ssm/hybrid/encdec/vlm) — the legacy
+    prefill + scalar-position decode loop, kept so every family in the
+    zoo stays servable.  One prefill trace per distinct prompt length
+    (no chunking); the tick clock counts one tick per generated token.
+    Returns (completed requests, counters) like ``simulate``."""
+    import jax.numpy as jnp
+
+    from repro.models import decode_step, prefill
+
+    prefill_fn = jax.jit(
+        lambda p, b, L: prefill(cfg, p, b, L), static_argnums=2
+    )
+    decode_fn = jax.jit(
+        lambda p, c, tok, pos: decode_step(cfg, p, c, tok, pos)
+    )
+    t, steps = 0.0, 0
+    for r in sorted(reqs, key=lambda q: q.arrival):
+        t = max(t, r.arrival)
+        r.t_admit = t
+        # vlm prefill prepends n_patches patch embeddings to the sequence,
+        # so the cache must hold them on top of prompt + generated tokens
+        cache_len = len(r.prompt) + r.max_new + (
+            cfg.n_patches if cfg.family == "vlm" else 0
+        )
+        batch = {"tokens": jnp.asarray([r.prompt], jnp.int32)}
+        if cfg.family == "vlm":
+            batch["patches"] = jnp.asarray(rng.standard_normal(
+                (1, cfg.n_patches, cfg.d_model)), jnp.float32)
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.asarray(rng.standard_normal(
+                (1, cfg.enc_frames, cfg.d_model)), jnp.float32)
+        logits, cache = prefill_fn(params, batch, cache_len)
+        tok = int(jnp.argmax(logits[0]))
+        t += 1.0
+        steps += 1
+        r.out.append(tok)
+        r.t_first = t
+        base = len(r.prompt) + (cfg.n_patches if cfg.family == "vlm" else 0)
+        i = 0
+        while len(r.out) < r.max_new and not (
+            r.eos is not None and tok == r.eos
+        ):
+            lg, cache = decode_fn(
+                params, cache, jnp.asarray([[tok]], jnp.int32),
+                jnp.int32(base + i),
+            )
+            tok = int(jnp.argmax(lg[0]))
+            r.out.append(tok)
+            t += 1.0
+            steps += 1
+            i += 1
+        r.t_done = t
+    return sorted(reqs, key=lambda q: q.rid), \
+        {"steps": steps, "max_concurrency": 1}
+
+
+def simulate(engine: ContinuousBatcher, reqs: list) -> dict:
+    """Run the arrival/admission/decode loop to completion; returns the
+    tick-clock counters (requests stamp their own t_* fields)."""
+    reqs = sorted(reqs, key=lambda r: r.arrival)
+    t, i, steps, max_conc = 0.0, 0, 0, 0
+    while i < len(reqs) or engine.sched.busy:
+        while i < len(reqs) and reqs[i].arrival <= t:
+            engine.submit(reqs[i])
+            i += 1
+        engine.try_admit(now=t)
+        decoding = engine.sched.decoding_slots()
+        if decoding:
+            max_conc = max(max_conc, len(decoding))
+            engine.step(now=t)
+            t += 1.0
+            steps += 1
+        elif i < len(reqs):
+            t = math.ceil(reqs[i].arrival)  # idle: fast-forward the clock
+    return {"steps": steps, "max_concurrency": max_conc}
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(
+        description="continuous-batching serve driver (DESIGN.md §12)")
     ap.add_argument("--arch", default="gemma-2b")
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--no-smoke", dest="smoke", action="store_false")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt", type=int, default=32)
-    ap.add_argument("--decode", type=int, default=16)
+    ap.add_argument("--smoke", dest="smoke", action="store_true",
+                    help="shrink the arch to the CPU smoke config "
+                         "(the default; see --no-smoke)")
+    ap.add_argument("--no-smoke", dest="smoke", action="store_false",
+                    help="run the full published config instead of the "
+                         "smoke shrink")
+    ap.set_defaults(smoke=True)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="concurrent request capacity (batched cache rows)")
+    ap.add_argument("--cache-len", type=int, default=128,
+                    help="per-slot KV capacity (prompt + generated)")
+    ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=8,
+                    help="synthetic workload size (ignored with --trace)")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="replay a JSONL workload file instead")
+    ap.add_argument("--arrival-rate", type=float, default=0.25,
+                    help="Poisson arrivals per decode-step tick (synthetic)")
+    ap.add_argument("--prompt-mean", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--rns-verify", action="store_true",
+                    help="RnsArray cache-integrity fingerprints per slot")
+    ap.add_argument("--inject-wire-corrupt", action="store_true",
+                    help="with --rns-verify: corrupt one stored wire "
+                         "buffer post-run and show detect/repair/re-verify")
+    ap.add_argument("--report", default=None, metavar="PATH",
+                    help="write the report dict as JSON")
+    ap.add_argument("--save-trace", default=None, metavar="PATH",
+                    help="write the workload as a replayable JSONL trace")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
     cfg.validate()
-    params = init_params(cfg, jax.random.key(0))
-    rng = np.random.default_rng(0)
-    batch = {"tokens": jnp.asarray(
-        rng.integers(0, cfg.vocab, (args.batch, args.prompt), dtype=np.int32))}
-    if cfg.family == "vlm":
-        batch["patches"] = jnp.asarray(
-            rng.standard_normal((args.batch, cfg.n_patches, cfg.d_model)),
-            jnp.float32)
-    if cfg.family == "encdec":
-        batch["frames"] = jnp.asarray(
-            rng.standard_normal((args.batch, cfg.enc_frames, cfg.d_model)),
-            jnp.float32)
+    rng = np.random.default_rng(args.seed)
+    params = init_params(cfg, jax.random.key(args.seed))
+    if args.trace:
+        reqs = load_trace(args.trace, rng, cfg.vocab)
+    else:
+        reqs = synth_requests(
+            args.requests, rng, cfg.vocab, prompt_mean=args.prompt_mean,
+            max_new=args.max_new, arrival_rate=args.arrival_rate,
+        )
+    if args.save_trace:
+        save_trace(args.save_trace, reqs)
 
-    cache_len = args.prompt + args.decode + (
-        cfg.n_patches if cfg.family == "vlm" else 0)
-    prefill_fn = jax.jit(lambda p, b: prefill(cfg, p, b, cache_len))
-    decode_fn = jax.jit(lambda p, c, t, i: decode_step(cfg, p, c, t, i))
-
+    try:
+        engine = ContinuousBatcher(
+            cfg, params, n_slots=args.slots, cache_len=args.cache_len,
+            prefill_chunk=args.prefill_chunk, rns_verify=args.rns_verify,
+        )
+    except NotImplementedError as err:
+        if args.rns_verify:
+            raise  # the integrity path needs the slot engine
+        print(f"# {cfg.name}: {err}")
+        print("# falling back to single-shot sequential serving")
+        engine = None
     t0 = time.time()
-    logits, cache = prefill_fn(params, batch)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
-    print(f"prefill: {args.batch}x{args.prompt} in {t_prefill*1e3:.0f}ms "
-          f"({args.batch*args.prompt/t_prefill:.0f} tok/s)")
+    if engine is not None:
+        counters = simulate(engine, reqs)
+        done = engine.sched.completed
+    else:
+        done, counters = simulate_single_shot(cfg, params, reqs, rng)
+    wall = time.time() - t0
 
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-    out = [tok]
-    base_pos = args.prompt + (cfg.n_patches if cfg.family == "vlm" else 0)
-    t0 = time.time()
-    for i in range(args.decode):
-        logits, cache = decode_fn(params, cache, tok, jnp.int32(base_pos + i))
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-        out.append(tok)
-    jax.block_until_ready(tok)
-    t_dec = time.time() - t0
-    toks = np.concatenate([np.asarray(t) for t in out], axis=1)
-    print(f"decode: {args.decode} steps in {t_dec*1e3:.0f}ms "
-          f"({args.batch*args.decode/t_dec:.1f} tok/s)")
-    print("sampled token ids (greedy):", toks[0][:12], "...")
-    return toks
+    toks = sum(len(r.out) for r in done)
+    report = {
+        "arch": cfg.name,
+        "engine": "continuous" if engine is not None else "single-shot",
+        "n_slots": args.slots if engine is not None else 1,
+        "cache_len": args.cache_len,
+        "requests": len(done),
+        "tokens_out": toks,
+        "steps": counters["steps"],
+        "max_concurrency": counters["max_concurrency"],
+        "wall_s": round(wall, 3),
+        "tok_per_s": round(toks / wall, 1) if wall > 0 else 0.0,
+        "ttft_ticks": _stats([r.t_first - r.arrival for r in done]),
+        "latency_ticks": _stats([r.t_done - r.arrival for r in done]),
+    }
+    if engine is not None:
+        report["jit_traces"] = engine.jit_cache_sizes()
+    if args.rns_verify:
+        rns = {
+            "slots_verified": sum(engine.verify_log.values()),
+            "slots_failed": sum(not v for v in engine.verify_log.values()),
+            "wire_ok": sum(engine.wire_ok(r.rid) for r in done),
+        }
+        if args.inject_wire_corrupt and done:
+            rid = done[0].rid
+            engine.corrupt_wire(rid, channel=1, delta=3)
+            rns["injected_detected"] = not engine.wire_ok(rid)
+            rns["injected_repair"] = engine.repair_wire(rid)
+            rns["injected_reverified"] = engine.wire_ok(rid)
+        report["rns"] = rns
+
+    print(json.dumps(report, indent=1))
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"# wrote report to {args.report}")
+    return report
 
 
 if __name__ == "__main__":

@@ -3,6 +3,7 @@ from .config import ModelConfig  # noqa: F401
 from .model import (  # noqa: F401
     abstract_params,
     decode_step,
+    extend_step,
     init_params,
     prefill,
     train_logits,

@@ -352,19 +352,24 @@ def attn_forward(
 
 def decode_attention(q, k_cache, v_cache, cur_len, *, window=None,
                      kscale=None, vscale=None):
-    """One-token attention over a linear cache.
+    """Cached attention for one or more appended tokens over a linear cache.
 
-    q: (b, 1, h, hd); caches: (b, S, g, hd); cur_len: tokens in cache
-    including the newest.  Masks slots >= cur_len (and outside the window).
+    q: (b, sq, h, hd); caches: (b, S, g, hd); cur_len: tokens in cache
+    including the newest — a scalar, or per-row ``(b,)`` when rows sit at
+    different sequence positions (the continuous-batching slot layout,
+    DESIGN.md §12).  Query i (of sq) lives at position cur_len - sq + i and
+    attends causally: slots >= its position + 1 (and outside the window)
+    are masked.  sq == 1 with scalar cur_len is the classic decode step;
+    sq > 1 is the chunked prefill-extend path.
 
     int8-quantized caches pass kscale/vscale (b, g): HBM reads stay int8 and
     the per-(batch, kv-head) scale folds in AFTER the contraction.
     """
     b, S, g, hd = k_cache.shape
-    h = q.shape[2]
+    sq, h = q.shape[1], q.shape[2]
     r = h // g
     cd = q.dtype if kscale is not None else k_cache.dtype
-    qg = q.reshape(b, 1, g, r, hd) * (hd ** -0.5)
+    qg = q.reshape(b, sq, g, r, hd) * (hd ** -0.5)
     s = jnp.einsum(
         "bqgrd,bkgd->bgrqk", qg.astype(cd), k_cache.astype(cd),
         preferred_element_type=jnp.float32,
@@ -372,10 +377,13 @@ def decode_attention(q, k_cache, v_cache, cur_len, *, window=None,
     if kscale is not None:
         s = s * kscale[:, :, None, None, None]
     jpos = jnp.arange(S)
-    mask = jpos < cur_len
+    # qpos: (b|1, sq) position of each query row/token; scalar cur_len
+    # reshapes to (1, 1) and broadcasts exactly like the historical path.
+    qpos = jnp.reshape(jnp.asarray(cur_len), (-1, 1)) - sq + jnp.arange(sq)
+    mask = jpos[None, None, :] <= qpos[..., None]
     if window is not None:
-        mask &= jpos > cur_len - 1 - window
-    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+        mask &= jpos[None, None, :] > qpos[..., None] - window
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum(
         "bgrqk,bkgd->bgrqd", p.astype(cd), v_cache.astype(cd),
@@ -383,7 +391,7 @@ def decode_attention(q, k_cache, v_cache, cur_len, *, window=None,
     )
     if vscale is not None:
         o = o * vscale[:, :, None, None, None]
-    return o.transpose(0, 3, 1, 2, 4).reshape(b, 1, h, hd).astype(q.dtype)
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd).astype(q.dtype)
 
 
 def decode_attention_ring(q, k_cache, v_cache, pos):
@@ -412,18 +420,30 @@ def decode_attention_ring(q, k_cache, v_cache, pos):
 def attn_decode(
     p, x, cache, pos, *, heads, kv, hd, theta, ring=False, window=None, enc=None
 ):
-    """One-token decode for one block.
+    """Cached decode for one block: one token, a chunk, per-row positions.
 
     cache: {"k": (b,S,g,hd), "v": ...} (S = window size when ring=True),
-    optionally int8 with "ks"/"vs" (b, g) dequant scales; pos: scalar
-    logical position of the new token.  Cross-attention blocks (enc != None)
-    have no cache to update.
+    optionally int8 with "ks"/"vs" (b, g) dequant scales.
+
+    x is (b, s, d) with s >= 1 new tokens per row; ``pos`` is the logical
+    position of the FIRST new token — a scalar (all rows aligned, the
+    historical decode step) or a ``(b,)`` vector (each row at its own
+    position: the continuous-batching slot layout, DESIGN.md §12).  s > 1
+    is the chunked prefill-extend path: tokens land at pos..pos+s-1 with
+    causal attention inside the chunk.  Ring (sliding-window) caches and
+    cross-attention (enc != None) support the classic scalar/s==1 call
+    only.  Cross-attention blocks have no cache to update.
     """
     dt = x.dtype
-    b = x.shape[0]
+    b, s, _ = x.shape
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
-    positions = jnp.full((b, 1), pos)
+    pos_arr = jnp.asarray(pos)
+    per_row = pos_arr.ndim > 0
+    positions = jnp.broadcast_to(
+        jnp.reshape(pos_arr, (-1, 1)) + jnp.arange(s)[None, :], (b, s)
+    )
     if enc is not None:
+        assert s == 1 and not per_row, "cross-attention decode is one-token"
         k = jnp.einsum("bsd,dgk->bsgk", enc, p["wk"].astype(dt))
         v = jnp.einsum("bsd,dgk->bsgk", enc, p["wv"].astype(dt))
         q = rope(q, positions, theta)
@@ -444,18 +464,31 @@ def attn_decode(
             jnp.round(v_new / cache["vs"][:, None, :, None]), -127, 127
         )
     S = cache["k"].shape[1]
-    slot = jnp.mod(pos, S) if ring else pos
-    kc = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1
-    )
-    vc = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1
-    )
+    if per_row:
+        assert not ring, "per-row positions need a linear (non-ring) cache"
+        # each row writes its s new tokens at its own offset
+        row_update = jax.vmap(
+            lambda c, u, st: jax.lax.dynamic_update_slice_in_dim(
+                c, u, st, axis=0
+            )
+        )
+        starts = pos_arr.astype(jnp.int32)
+        kc = row_update(cache["k"], k_new.astype(cache["k"].dtype), starts)
+        vc = row_update(cache["v"], v_new.astype(cache["v"].dtype), starts)
+    else:
+        slot = jnp.mod(pos, S) if ring else pos
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1
+        )
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1
+        )
     if ring:
+        assert s == 1, "ring caches decode one token at a time"
         o = decode_attention_ring(q, kc, vc, pos)
     else:
         o = decode_attention(
-            q, kc, vc, pos + 1, window=window,
+            q, kc, vc, pos_arr + s, window=window,
             kscale=cache.get("ks"), vscale=cache.get("vs"),
         )
     out_cache = {"k": kc, "v": vc}

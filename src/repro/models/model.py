@@ -4,9 +4,13 @@
     train_logits(cfg, params, batch)             -> (logits, aux_loss)
     prefill(cfg, params, batch, cache_len)       -> (last_logits, cache)
     decode_step(cfg, params, cache, tokens, pos) -> (logits, cache)
+    extend_step(cfg, params, cache, tokens, pos) -> (chunk_logits, cache)
 
 Every function is jit/lower-compatible (init works under jax.eval_shape for
-the allocation-free dry-run).
+the allocation-free dry-run).  ``decode_step`` additionally accepts per-row
+``(b,)`` positions on linear-cache families, and ``extend_step`` appends a
+whole token CHUNK to such a cache — together they are the substrate of the
+continuous-batching serve engine (DESIGN.md §12).
 """
 from __future__ import annotations
 
@@ -15,7 +19,8 @@ import jax
 from .config import ModelConfig
 from . import ssm_models, transformer
 
-__all__ = ["init_params", "train_logits", "prefill", "decode_step", "abstract_params"]
+__all__ = ["init_params", "train_logits", "prefill", "decode_step",
+           "extend_step", "abstract_params"]
 
 _DENSE = ("dense", "moe", "vlm")
 
@@ -70,3 +75,22 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
     if cfg.family == "hybrid":
         return ssm_models.hybrid_decode(cfg, params, cache, tokens, pos)
     raise ValueError(cfg.family)
+
+
+def extend_step(cfg: ModelConfig, params, cache, tokens, pos,
+                logit_index=None):
+    """Append a token chunk (b, C) at positions pos..pos+C-1 to a linear
+    KV cache; returns (logits over all C positions — or just position
+    ``logit_index`` when given — and the cache).  Text-only linear-cache
+    transformer families — SSM/hybrid/encdec prefill state is not
+    chunk-extendable through this API, and vlm is excluded because its
+    cache layout reserves positions 0..n_patches-1 for the patch prefix
+    that only a full prefill can place."""
+    if cfg.family in ("dense", "moe"):
+        return transformer.decoder_only_extend(
+            cfg, params, cache, tokens, pos, logit_index=logit_index
+        )
+    raise NotImplementedError(
+        f"extend_step supports text-only linear-KV transformer families "
+        f"(dense/moe), not {cfg.family}"
+    )

@@ -163,7 +163,14 @@ def mamba2_forward(params, cfg, u, *, initial_state=None):
         jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt_)),
         "batch", None, None,
     )
-    state = {"S": S_last, "conv": xBC_raw[:, s - (cfg.ssm_conv - 1) :, :]}
+    # conv ring state: the last W-1 raw inputs, zero-left-padded when the
+    # prompt is shorter (matching the causal conv's own left padding — a
+    # negative slice start would silently hand decode a short window)
+    W1 = cfg.ssm_conv - 1
+    tail = xBC_raw[:, max(0, s - W1):, :]
+    if s < W1:
+        tail = jnp.pad(tail, ((0, 0), (W1 - s, 0), (0, 0)))
+    state = {"S": S_last, "conv": tail}
     return out, state
 
 

@@ -307,12 +307,14 @@ def _windowed_decode(cfg: ModelConfig, params, cache, tokens, pos):
     return logits, out
 
 
-def decoder_only_decode(cfg: ModelConfig, params, cache, tokens, pos):
-    """One decode step.  tokens: (b, 1); pos: scalar position of new token."""
-    if "lk" in cache:
-        return _windowed_decode(cfg, params, cache, tokens, pos)
-    dt = _dtype(cfg)
-    x = embed(tokens, params["embed"], dt)
+def _linear_cache_stack(cfg: ModelConfig, params, cache, x, pos):
+    """Scanned layer stack over a linear (non-ring) KV cache.
+
+    Shared by the one-token decode step and the chunked prefill-extend
+    path: x is (b, s, d) with s >= 1 new tokens starting at position
+    ``pos`` (scalar, or per-row ``(b,)`` for the continuous-batching slot
+    layout).  Returns (x after final norm, k cache stack, v cache stack).
+    """
     flags = jnp.asarray(global_flags(cfg))
     akw = _attn_kwargs(cfg)
 
@@ -340,10 +342,52 @@ def decoder_only_decode(cfg: ModelConfig, params, cache, tokens, pos):
     if quant:
         xs = xs + (cache["ks"], cache["vs"])
     x, (kc, vc) = jax.lax.scan(body, x, xs)
-    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), kc, vc
+
+
+def decoder_only_decode(cfg: ModelConfig, params, cache, tokens, pos):
+    """One decode step.  tokens: (b, 1); pos: scalar position of the new
+    token, or ``(b,)`` per-row positions (continuous-batching slots)."""
+    if "lk" in cache:
+        return _windowed_decode(cfg, params, cache, tokens, pos)
+    dt = _dtype(cfg)
+    x = embed(tokens, params["embed"], dt)
+    x, kc, vc = _linear_cache_stack(cfg, params, cache, x, pos)
     logits = unembed(x[:, 0], params["embed"])
     out = dict(cache, k=kc, v=vc)
     out["len"] = cache["len"] + 1
+    return logits, out
+
+
+def decoder_only_extend(cfg: ModelConfig, params, cache, tokens, pos,
+                        logit_index=None):
+    """Chunked prefill-extend: append a CHUNK of tokens to a linear cache.
+
+    tokens: (b, C) land at positions pos..pos+C-1 (pos scalar or per-row
+    ``(b,)``) with causal attention inside the chunk and full attention
+    over the cache prefix.  Returns (logits (b, C, V) over ALL C
+    positions, updated cache); with ``logit_index`` (a scalar chunk
+    position, may be traced) only that position is unembedded —
+    (b, 1, V) — which is what the serve engine's admission loop reads
+    (unembedding a whole chunk against a real vocab is the dominant
+    prefill cost, and only the last REAL prompt position's row is ever
+    used; DESIGN.md §12).  Ring (grouped sliding-window) caches are not
+    supported; serve lowers such archs to the masked linear-cache layout.
+    """
+    if "lk" in cache:
+        raise NotImplementedError(
+            "extend over grouped ring caches is unsupported; build the "
+            "cache with window_cache=False (full-length + window mask)"
+        )
+    dt = _dtype(cfg)
+    x = embed(tokens, params["embed"], dt)
+    x, kc, vc = _linear_cache_stack(cfg, params, cache, x, pos)
+    if logit_index is not None:
+        x = jax.lax.dynamic_index_in_dim(x, logit_index, axis=1,
+                                         keepdims=True)
+    logits = unembed(x, params["embed"])
+    out = dict(cache, k=kc, v=vc)
+    out["len"] = cache["len"] + tokens.shape[1]
     return logits, out
 
 

@@ -1,2 +1,6 @@
-"""Serving substrate: prefill / decode with sharded caches."""
+"""Serving substrate: prefill/decode steps over sharded caches plus the
+continuous-batching engine (slot scheduler + persistent-jit batcher,
+DESIGN.md §12)."""
 from .serve_step import make_prefill, make_decode_step, cache_abstract  # noqa: F401
+from .scheduler import Request, Slot, SlotScheduler  # noqa: F401
+from .batcher import ContinuousBatcher  # noqa: F401

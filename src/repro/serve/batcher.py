@@ -1,0 +1,379 @@
+"""Continuous-batching serve engine over the sharded KV cache (DESIGN.md §12).
+
+One persistent ``jax.jit`` decode step serves every in-flight request at
+once: the batch axis of the decode cache is a pool of ``n_slots`` fixed-
+capacity rows ("slots"), each row belonging to at most one request.  New
+requests are admitted into FREE rows *mid-decode* — the engine chunk-
+prefills the prompt through a fixed-shape ``extend_step`` graph, splices
+the resulting row into the batched cache with one jitted
+dynamic-update, and the very next decode step carries the newcomer along
+with every already-running stream.  Because the decode step takes per-row
+positions (a ``(n_slots,)`` vector, see models/attention.py), arrival and
+departure never change any traced shape: the engine compiles each of its
+four graphs exactly once per process, which ``jit_cache_sizes()`` exposes
+and tests/test_serve_batcher.py asserts.
+
+Slot rows are computationally independent (attention masks per-row, MoE
+dispatch is per-row, every norm/matmul is row-local), so a request's
+tokens are bitwise-identical whether it runs alone or packed against
+arbitrary co-resident traffic — the isolation invariant the batcher's
+tier-1 tests pin down.
+
+The cache layout is exactly ``dist/sharding.cache_specs``' decode layout:
+pass ``mesh=`` and the batched cache is placed on it — slots (the batch
+axis) shard over the data axes, KV heads over "model" when divisible, and
+the GQA sequence-axis fallback applies unchanged because slots only ever
+index the batch axis.
+
+``rns_verify=True`` arms the RNS integrity path: at admission the engine
+fingerprints the slot's immutable prompt region (per-layer K/V sums) and
+encodes it through an RRNS ``GradCodec`` into a typed channel-major
+``RnsArray`` wire buffer.  Decode traffic never writes below a slot's
+prompt length, so at retirement the recomputed fingerprint must match
+bitwise — any mismatch means cross-slot clobbering.  The wire buffers
+themselves are locate-and-correct codewords: ``wire_ok`` detects a
+corrupted stored buffer via ``verify_packed`` and ``repair_wire`` rebuilds
+the bad channel in place with ``dist.fault.repair_packed`` — fault repair
+composed with serving (DESIGN.md §12).
+
+Doctest — admit, stream, retire (a 5-token prompt, 4 greedy tokens)::
+
+    >>> import jax
+    >>> from repro.configs import get_config
+    >>> from repro.models import init_params
+    >>> from repro.serve.batcher import ContinuousBatcher
+    >>> from repro.serve.scheduler import Request
+    >>> cfg = get_config("gemma-2b").smoke()
+    >>> eng = ContinuousBatcher(cfg, init_params(cfg, jax.random.key(0)),
+    ...                         n_slots=2, cache_len=32, prefill_chunk=8)
+    >>> eng.submit(Request(rid=0, prompt=[3, 1, 4, 1, 5], max_new=4))
+    >>> done = eng.run_to_completion()
+    >>> [(r.rid, len(r.out)) for r in done]
+    [(0, 4)]
+    >>> eng.jit_cache_sizes()["decode"]         # one persistent trace
+    1
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import cache_specs, named_shardings
+from repro.models import decode_step, extend_step
+from repro.serve.scheduler import Request, Slot, SlotScheduler
+from repro.serve.serve_step import cache_abstract
+
+__all__ = ["ContinuousBatcher"]
+
+_SUPPORTED = ("dense", "moe")
+
+
+def _zero_cache(abs_tree):
+    """Concrete all-zero cache matching an abstract decode-cache pytree
+    ("len" becomes the int32 scalar 0)."""
+    return jax.tree_util.tree_map(
+        lambda l: jnp.zeros(l.shape, l.dtype), abs_tree
+    )
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching over the sharded decode cache.
+
+    Parameters
+    ----------
+    cfg, params : the model (linear-KV transformer families: dense/moe).
+        Sliding-window archs are lowered to the masked full-length cache
+        layout (``window_cache=False``) so every slot row is linear.
+    n_slots : rows of the batched cache = max concurrent requests.
+    cache_len : per-slot KV capacity; every request needs
+        ``len(prompt) + max_new <= cache_len``.
+    prefill_chunk : token-chunk size of the admission prefill loop — long
+        prompts run as ceil(plen/chunk) calls of ONE fixed-shape graph.
+    rns_verify : arm the RnsArray cache-integrity fingerprints.
+    mesh : optional ``jax.sharding.Mesh``; the batched cache is placed on
+        ``dist.sharding.cache_specs``' layout over it.
+    """
+
+    def __init__(self, cfg, params, *, n_slots: int, cache_len: int,
+                 prefill_chunk: int = 32, rns_verify: bool = False,
+                 mesh=None):
+        cfg.validate()
+        if cfg.family not in _SUPPORTED:
+            raise NotImplementedError(
+                f"continuous batching needs a linear-KV transformer family "
+                f"{_SUPPORTED}, not {cfg.family!r} (SSM/hybrid state and "
+                f"encoder caches are not slot-spliceable yet)"
+            )
+        if cfg.kv_quant:
+            raise NotImplementedError(
+                "int8 KV slots need per-slot scale re-estimation at "
+                "admission; run the batcher on the fp cache layout"
+            )
+        if cfg.window and cfg.window_cache:
+            # grouped ring caches can't take per-row positions; the masked
+            # full-length layout is semantically identical (more HBM)
+            cfg = dataclasses.replace(cfg, window_cache=False)
+        if cache_len > 512 and cache_len % 512:
+            raise ValueError(
+                "cache_len beyond one flash chunk must be a multiple of "
+                "512 (prefill eval_shape runs the chunked attention)"
+            )
+        if cache_len % prefill_chunk:
+            # a prompt padded to the chunk grid could otherwise run past
+            # the row and XLA's update-slice clamp would silently shift
+            # the write window backwards over earlier positions
+            raise ValueError(
+                f"prefill_chunk={prefill_chunk} must divide "
+                f"cache_len={cache_len}"
+            )
+        self.cfg, self.params = cfg, params
+        self.prefill_chunk = int(prefill_chunk)
+        self.rns_verify = bool(rns_verify)
+        self.sched = SlotScheduler(n_slots, cache_len)
+
+        params_abs = jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), params
+        )
+        solo_abs = cache_abstract(cfg, params_abs, 1, cache_len)
+        batch_abs = cache_abstract(cfg, params_abs, n_slots, cache_len)
+        self._solo_zero = _zero_cache(solo_abs)
+        self.cache = _zero_cache(batch_abs)
+        self.mesh = mesh
+        if mesh is not None:
+            self.cache_pspecs = cache_specs(batch_abs, mesh)
+            self.cache = jax.device_put(
+                self.cache, named_shardings(self.cache_pspecs, mesh)
+            )
+
+        # The engine's four graphs — each traces exactly once per process
+        # because every argument keeps a fixed shape across admissions,
+        # retirements, and arbitrary slot occupancy.
+        self._extend_fn = jax.jit(
+            lambda p, c, t, pos, idx: extend_step(
+                cfg, p, c, t, pos, logit_index=idx
+            )
+        )
+        self._decode_fn = jax.jit(self._decode_impl)
+        self._insert_fn = jax.jit(self._insert_impl)
+        self._fp_fn = jax.jit(self._fp_impl) if rns_verify else None
+        if rns_verify:
+            from repro.dist.grad_codec import GradCodec
+
+            # world=1: fingerprints are fresh encodings, wraps=0 repairs
+            self.codec = GradCodec.make(world=1, correct=True)
+            self._wire: dict[int, object] = {}
+            self.verify_log: dict[int, bool] = {}
+
+    # ------------------------------------------------------ jitted graphs
+    def _decode_impl(self, params, cache, tokens, pos):
+        """One batched decode step + greedy sampling.  tokens: (B, 1),
+        pos: (B,) per-slot write positions."""
+        logits, cache = decode_step(self.cfg, params, cache, tokens, pos)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    def _insert_impl(self, batch_cache, solo_cache, slot):
+        """Splice a freshly prefilled solo cache (batch 1) into slot row
+        ``slot`` of the batched cache (one dynamic-update per leaf; the
+        scalar "len" bookkeeping leaf is left alone)."""
+        def one(b_leaf, s_leaf):
+            if getattr(b_leaf, "ndim", 0) == 0:
+                return b_leaf
+            return jax.lax.dynamic_update_slice_in_dim(
+                b_leaf, s_leaf.astype(b_leaf.dtype), slot, axis=1
+            )
+
+        return jax.tree_util.tree_map(one, batch_cache, solo_cache)
+
+    def _fp_impl(self, cache, slot, plen):
+        """Per-layer masked K/V sums over slot row ``slot``'s immutable
+        prompt region [0, plen) -> (2L,) f32 fingerprint vector."""
+        valid = (jnp.arange(cache["k"].shape[2]) < plen).astype(jnp.float32)
+        sums = []
+        for name in ("k", "v"):
+            row = jax.lax.dynamic_index_in_dim(
+                cache[name], slot, axis=1, keepdims=False
+            )  # (L, S, g, hd)
+            sums.append(jnp.sum(
+                row.astype(jnp.float32) * valid[None, :, None, None],
+                axis=(1, 2, 3),
+            ))
+        return jnp.concatenate(sums)
+
+    # ------------------------------------------------------ admission path
+    def submit(self, req: Request) -> None:
+        if self.rns_verify and (
+            req.rid in self._wire
+            or any(q.rid == req.rid for q in self.sched.queue)
+        ):
+            # verify state is keyed on rid; refuse the collision before
+            # any slot is bound or device work runs
+            raise ValueError(
+                f"rid {req.rid} already holds verify state (queued, in "
+                f"flight, or retired-undrained); use unique rids, or "
+                f"drain_completed() between reuses"
+            )
+        self.sched.submit(req)
+
+    def try_admit(self, now: float = 0.0) -> list[Slot]:
+        """Admit as many queued requests as there are FREE slots; each
+        admission chunk-prefills the prompt and splices it into the
+        batched cache.  Returns the admitted slots (normally now in
+        DECODE; already FREE again if the first token retired the
+        request — one-token budget or instant EOS)."""
+        admitted = []
+        while True:
+            slot = self.sched.admit_next(now)
+            if slot is None:
+                return admitted
+            self._prefill_into(slot, now)
+            admitted.append(slot)
+
+    def _prefill_into(self, slot: Slot, now: float) -> None:
+        req = slot.req
+        prompt = [int(t) for t in req.prompt]
+        plen, C = len(prompt), self.prefill_chunk
+        n_chunks = -(-plen // C)
+        prompt = prompt + [0] * (n_chunks * C - plen)
+        solo = self._solo_zero
+        last = (plen - 1) - (n_chunks - 1) * C
+        for ci in range(n_chunks):
+            toks = jnp.asarray([prompt[ci * C:(ci + 1) * C]], jnp.int32)
+            # only the final chunk's last REAL prompt position is ever
+            # read (chunk padding beyond it is causally invisible below
+            # it); the traced index keeps the unembed to one row per call
+            idx = last if ci == n_chunks - 1 else 0
+            logits, solo = self._extend_fn(
+                self.params, solo, toks, jnp.int32(ci * C), jnp.int32(idx)
+            )
+        first = int(jnp.argmax(logits[0, 0]))
+        self.cache = self._insert_fn(
+            self.cache, solo, jnp.int32(slot.index)
+        )
+        if self.rns_verify:
+            fp = self._fp_fn(
+                self.cache, jnp.int32(slot.index), jnp.int32(plen)
+            )
+            self._wire[req.rid] = self.codec.encode_array(
+                fp, channel_major=True
+            )
+        if self.sched.start_decode(slot, first, now) and self.rns_verify:
+            # instant retirement (one-token budget / immediate EOS) never
+            # reaches step()'s retirement branch — verify here instead
+            self.verify_log[req.rid] = self.verify_request(req)
+
+    # --------------------------------------------------------- decode loop
+    def step(self, now: float = 0.0) -> list[Request]:
+        """One persistent batched decode step over every DECODE slot;
+        returns the requests that retired this step."""
+        decoding = self.sched.decoding_slots()
+        if not decoding:
+            return []
+        toks, poss = self.sched.step_rows()
+        nxt, self.cache = self._decode_fn(
+            self.params,
+            self.cache,
+            jnp.asarray(toks, jnp.int32)[:, None],
+            jnp.asarray(poss, jnp.int32),
+        )
+        nxt = np.asarray(nxt)
+        retired = []
+        for slot in decoding:
+            self.sched.advance(slot)
+            req = slot.req
+            if self.sched.record_token(slot, int(nxt[slot.index]), now):
+                retired.append(req)
+                if self.rns_verify:
+                    self.verify_log[req.rid] = self.verify_request(req)
+        return retired
+
+    def run_to_completion(self, max_steps: int = 1 << 20) -> list[Request]:
+        """Drain queue and slots (all arrivals already submitted)."""
+        steps = 0
+        while self.sched.busy:
+            self.try_admit(float(steps))
+            if self.sched.decoding_slots():
+                self.step(float(steps))
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("serve loop exceeded max_steps")
+        return self.sched.completed
+
+    def drain_completed(self) -> list[Request]:
+        """Hand back the retired requests and release the engine-held
+        state keyed on them (wire buffers, verify entries).  A long-lived
+        server calls this after reading each batch of results — without
+        it, retired-request state (host Request objects and, under
+        ``rns_verify``, one device RnsArray per request) accumulates for
+        the engine's lifetime."""
+        done, self.sched.completed = self.sched.completed, []
+        if self.rns_verify:
+            for r in done:
+                self._wire.pop(r.rid, None)
+                self.verify_log.pop(r.rid, None)
+        return done
+
+    def jit_cache_sizes(self) -> dict:
+        """Compiled-graph counts per engine function — the no-retrace
+        invariant says every value stays 1 for the engine's lifetime."""
+        sizes = {
+            "decode": self._decode_fn._cache_size(),
+            "extend": self._extend_fn._cache_size(),
+            "insert": self._insert_fn._cache_size(),
+        }
+        if self._fp_fn is not None:
+            sizes["fingerprint"] = self._fp_fn._cache_size()
+        return sizes
+
+    # ------------------------------------------------- RNS integrity path
+    def _require_verify(self):
+        if not self.rns_verify:
+            raise RuntimeError("engine built without rns_verify=True")
+
+    def verify_request(self, req: Request) -> bool:
+        """Recompute the prompt-region fingerprint of ``req``'s slot row
+        and compare its RNS encoding bitwise against the stored wire
+        buffer.  Valid until the slot row is reused by a later admission;
+        the engine calls this automatically at retirement."""
+        self._require_verify()
+        fp = self._fp_fn(
+            self.cache, jnp.int32(req.slot_index),
+            jnp.int32(len(req.prompt)),
+        )
+        fresh = self.codec.encode_array(fp, channel_major=True)
+        stored = self._wire[req.rid]
+        return bool(jnp.array_equal(fresh.residues, stored.residues))
+
+    def wire_ok(self, rid: int) -> bool:
+        """Codeword self-consistency of the stored wire buffer (RRNS
+        redundant-channel check) — detects corruption of the stored
+        fingerprint itself, without touching the cache."""
+        self._require_verify()
+        return bool(jnp.all(self.codec.verify_packed(self._wire[rid])))
+
+    def repair_wire(self, rid: int) -> dict:
+        """Locate-and-correct the stored wire buffer in place via
+        ``dist.fault.repair_packed``; returns its report dict."""
+        from repro.dist.fault import repair_packed
+
+        self._require_verify()
+        fixed, report = repair_packed(self.codec, self._wire[rid], wraps=0)
+        self._wire[rid] = fixed
+        return report
+
+    def corrupt_wire(self, rid: int, channel: int = 0, delta: int = 1,
+                     index: int = 0) -> None:
+        """Fault injection for tests/drivers: modular-bump one residue of
+        the stored wire buffer (stays a syntactically valid residue so the
+        corruption is only catchable by the redundant channels)."""
+        self._require_verify()
+        arr = self._wire[rid]
+        mods = tuple(self.codec.base.moduli) + self.codec.redundant
+        m = mods[channel]
+        res = arr.residues
+        res = res.at[channel, index].set(
+            (res[channel, index] + jnp.int32(delta)) % m
+        )
+        self._wire[rid] = dataclasses.replace(arr, residues=res)

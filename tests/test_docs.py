@@ -13,15 +13,18 @@ import pytest
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 # The modules whose docstrings carry runnable examples (layouts, the x64
-# requirement, fused-fallback conditions, the RRNS repair API).  Resolved
-# via importlib: package __init__ re-exports shadow same-named submodule
-# attributes (repro.core.mrc the module vs mrc the function).
+# requirement, fused-fallback conditions, the RRNS repair API, the serve
+# engine's admission/retirement loop).  Resolved via importlib: package
+# __init__ re-exports shadow same-named submodule attributes
+# (repro.core.mrc the module vs mrc the function).
 DOCTEST_MODULES = (
     "repro.dist.grad_codec",
     "repro.core.array",
     "repro.core.dispatch",
     "repro.core.mrc",
     "repro.core.extend",
+    "repro.serve.scheduler",
+    "repro.serve.batcher",
 )
 
 

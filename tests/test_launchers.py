@@ -25,12 +25,52 @@ def test_train_driver_resumes_exactly(tmp_path):
     assert "step_8" in steps
 
 
-def test_serve_driver_runs():
+def test_serve_driver_runs(tmp_path):
     from repro.launch.serve import main as serve_main
 
-    toks = serve_main(["--arch", "mamba2-370m", "--batch", "2",
-                       "--prompt", "16", "--decode", "4"])
-    assert toks.shape == (2, 5)
+    trace = str(tmp_path / "workload.serve-trace.jsonl")
+    report = serve_main([
+        "--arch", "gemma-2b", "--requests", "4", "--slots", "2",
+        "--cache-len", "32", "--prefill-chunk", "8", "--max-new", "4",
+        "--prompt-mean", "6", "--save-trace", trace,
+        "--report", str(tmp_path / "report.json"),
+    ])
+    assert report["requests"] == 4 and report["tokens_out"] == 16
+    assert report["jit_traces"] == {"decode": 1, "extend": 1, "insert": 1}
+    # the saved trace replays to the identical deterministic tick metrics
+    replay = serve_main([
+        "--arch", "gemma-2b", "--trace", trace, "--slots", "2",
+        "--cache-len", "32", "--prefill-chunk", "8",
+    ])
+    assert replay["latency_ticks"] == report["latency_ticks"]
+
+
+@pytest.mark.parametrize("arch", ["mamba2-370m", "internvl2-26b"])
+def test_serve_driver_single_shot_fallback(arch):
+    """Gated families (ssm, vlm with its patch-prefix cache) still serve
+    via the sequential fallback."""
+    from repro.launch.serve import main as serve_main
+
+    report = serve_main([
+        "--arch", arch, "--requests", "2", "--max-new", "3",
+        "--prompt-mean", "6",
+    ])
+    assert report["engine"] == "single-shot"
+    assert report["requests"] == 2 and report["tokens_out"] == 6
+    assert "jit_traces" not in report
+
+
+def test_serve_driver_rejects_duplicate_rids(tmp_path):
+    from repro.launch.serve import main as serve_main
+
+    trace = tmp_path / "dup.serve-trace.jsonl"
+    trace.write_text(
+        '{"rid": 3, "prompt": [1, 2], "max_new": 2}\n'
+        '{"rid": 3, "prompt": [4, 5], "max_new": 2}\n'
+    )
+    with pytest.raises(ValueError, match="duplicate rids"):
+        serve_main(["--arch", "gemma-2b", "--trace", str(trace),
+                    "--cache-len", "32", "--prefill-chunk", "8"])
 
 
 def test_dryrun_subprocess_small_mesh():

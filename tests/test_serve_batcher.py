@@ -1,0 +1,269 @@
+"""Continuous-batching engine invariants (DESIGN.md §12).
+
+The tier-1 contract of the serve subsystem:
+
+* slot ISOLATION — a request's tokens (and its whole KV row) are
+  bitwise-identical whether it streams alone or packed against staggered
+  co-resident traffic, including requests admitted mid-decode;
+* slot REUSE — retirement returns rows to the pool and later admissions
+  recycle them;
+* NO RETRACE — the engine's jitted graphs each compile exactly once no
+  matter how occupancy churns (asserted via jit cache stats);
+* RNS integrity — prompt-region fingerprints verify at retirement, and an
+  injected wire-buffer corruption is detected and repaired in place
+  through ``dist.fault.repair_packed``.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+import repro  # noqa: F401
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serve.batcher import ContinuousBatcher
+from repro.serve.scheduler import Request, SlotScheduler
+
+CACHE_LEN = 32
+CHUNK = 8
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("gemma-2b").smoke()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(cfg, jax.random.key(0))
+
+
+def _requests(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    mk = lambda rid, plen, max_new: Request(
+        rid=rid, prompt=[int(t) for t in rng.integers(1, cfg.vocab, plen)],
+        max_new=max_new,
+    )
+    # prompt lengths straddle the prefill chunk (3 < 8 < 11) so admission
+    # exercises both the single-chunk and the multi-chunk path
+    return [mk(0, 5, 8), mk(1, 11, 7), mk(2, 3, 9)]
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("n_slots", 3)
+    kw.setdefault("cache_len", CACHE_LEN)
+    kw.setdefault("prefill_chunk", CHUNK)
+    return ContinuousBatcher(cfg, params, **kw)
+
+
+def _row(engine, slot_index, plen, n_out):
+    """A request's KV row over its full written span [0, plen+n_out-1)
+    (idle-row junk writes park at cache_len-1, outside every span)."""
+    end = plen + n_out - 1  # last written position + 1
+    k = np.asarray(engine.cache["k"])[:, slot_index, :end]
+    v = np.asarray(engine.cache["v"])[:, slot_index, :end]
+    return k, v
+
+
+def _run_mixed(cfg, params):
+    """Staggered admissions: r0 streams alone, r1 joins mid-decode, then
+    r2 — with all three overlapping before any retirement."""
+    eng = _engine(cfg, params)
+    reqs = _requests(cfg)
+    eng.submit(reqs[0])
+    eng.try_admit()
+    eng.step(), eng.step()
+    eng.submit(reqs[1])
+    eng.try_admit()
+    eng.step()
+    eng.submit(reqs[2])
+    eng.try_admit()
+    assert len(eng.sched.decoding_slots()) == 3  # genuine 3-way overlap
+    while eng.sched.busy:
+        eng.try_admit()
+        eng.step()
+    return eng, reqs
+
+
+def test_mid_stream_admission_bitwise_vs_solo(cfg, params):
+    eng, reqs = _run_mixed(cfg, params)
+    mixed = {r.rid: list(r.out) for r in eng.sched.completed}
+    assert sorted(mixed) == [0, 1, 2]
+    for r in reqs:
+        solo = _engine(cfg, params)
+        solo_req = Request(rid=r.rid, prompt=list(r.prompt),
+                           max_new=r.max_new)
+        done = solo.run_to_completion()
+        assert [q.rid for q in done] == []  # nothing submitted yet
+        solo.submit(solo_req)
+        done = solo.run_to_completion()
+        assert done[0].out == mixed[r.rid]
+        # the whole KV trajectory matches bitwise, not just the argmaxes
+        mk, mv = _row(eng, r.slot_index, len(r.prompt), len(r.out))
+        sk, sv = _row(solo, solo_req.slot_index, len(r.prompt),
+                      len(solo_req.out))
+        np.testing.assert_array_equal(mk, sk)
+        np.testing.assert_array_equal(mv, sv)
+
+
+def test_prefill_chunk_size_is_bitwise_invisible(cfg, params):
+    outs = []
+    for chunk in (4, 16):
+        eng = _engine(cfg, params, prefill_chunk=chunk)
+        for r in _requests(cfg):
+            eng.submit(r)
+        done = eng.run_to_completion()
+        outs.append({r.rid: r.out for r in done})
+    assert outs[0] == outs[1]
+
+
+def test_slot_reuse_after_retirement(cfg, params):
+    eng = _engine(cfg, params, n_slots=2)
+    rng = np.random.default_rng(3)
+    for i in range(5):
+        eng.submit(Request(
+            rid=i, prompt=[int(t) for t in rng.integers(1, cfg.vocab, 4)],
+            max_new=3 + i % 3,
+        ))
+    done = eng.run_to_completion()
+    assert sorted(r.rid for r in done) == list(range(5))
+    assert all(len(r.out) == r.max_new for r in done)
+    by_slot = {}
+    for r in done:
+        by_slot.setdefault(r.slot_index, []).append(r.rid)
+    assert set(by_slot) <= {0, 1}               # never more rows than slots
+    assert max(len(v) for v in by_slot.values()) >= 2  # rows were recycled
+
+
+def test_no_retrace_across_churn(cfg, params):
+    eng, _ = _run_mixed(cfg, params)
+    sizes = eng.jit_cache_sizes()
+    assert sizes == {"decode": 1, "extend": 1, "insert": 1}, sizes
+
+
+def test_eos_retires_early(cfg, params):
+    eng = _engine(cfg, params)
+    probe = Request(rid=0, prompt=[1, 2, 3], max_new=6)
+    eng.submit(probe)
+    first = eng.run_to_completion()[0].out[0]
+    eng2 = _engine(cfg, params)
+    eng2.submit(Request(rid=1, prompt=[1, 2, 3], max_new=6, eos=first))
+    done = eng2.run_to_completion()
+    assert done[0].out == [first]  # instant EOS: one token, slot freed
+
+
+def test_rns_verify_and_injected_corruption_repair(cfg, params):
+    eng = _engine(cfg, params, n_slots=2, rns_verify=True)
+    for r in _requests(cfg):
+        eng.submit(r)
+    # one-token budget: retires inside admission, must still be verified
+    eng.submit(Request(rid=9, prompt=[1, 2, 3], max_new=1))
+    done = eng.run_to_completion()
+    # every retirement verified its prompt-region fingerprint bitwise
+    assert eng.verify_log == {r.rid: True for r in done}
+    assert 9 in eng.verify_log
+    assert all(eng.wire_ok(r.rid) for r in done)
+    # inject a single-channel wire corruption: detected, located,
+    # corrected in place, and the repaired buffer re-verifies against the
+    # (recomputable) fingerprint encoding
+    rid = done[0].rid
+    stored = eng._wire[rid].residues.copy()
+    eng.corrupt_wire(rid, channel=1, delta=3)
+    assert not eng.wire_ok(rid)
+    report = eng.repair_wire(rid)
+    assert report == {"repaired": 1, "unrecoverable": 0}
+    assert eng.wire_ok(rid)
+    np.testing.assert_array_equal(np.asarray(eng._wire[rid].residues),
+                                  np.asarray(stored))
+    assert eng.jit_cache_sizes()["fingerprint"] == 1
+
+
+def test_fingerprint_stays_valid_after_retirement(cfg, params):
+    """A retired slot's fingerprint must keep verifying while other
+    slots decode on (idle junk writes park OUTSIDE the row span), until
+    the row is actually reused."""
+    eng = _engine(cfg, params, n_slots=2, rns_verify=True)
+    short = Request(rid=0, prompt=[1, 2, 3], max_new=2)
+    long = Request(rid=1, prompt=[4, 5, 6], max_new=8)
+    eng.submit(short), eng.submit(long)
+    eng.try_admit()
+    while short.t_done is None:
+        eng.step()
+    for _ in range(3):  # rid 0's row sits FREE while rid 1 decodes
+        eng.step()
+    assert eng.verify_request(short)
+
+
+def test_drain_completed_releases_state(cfg, params):
+    eng = _engine(cfg, params, n_slots=2, rns_verify=True)
+    for r in _requests(cfg):
+        eng.submit(r)
+    eng.run_to_completion()
+    done = eng.drain_completed()
+    assert sorted(r.rid for r in done) == [0, 1, 2]
+    assert eng.sched.completed == [] and eng._wire == {}
+    assert eng.verify_log == {}
+
+
+def test_chunk_must_divide_cache_len(cfg, params):
+    with pytest.raises(ValueError, match="must divide"):
+        _engine(cfg, params, cache_len=30, prefill_chunk=8)
+
+
+def test_duplicate_rid_rejected_under_rns_verify(cfg, params):
+    """Verify state is keyed on rid; a collision must fail loudly at
+    submit — before any slot is bound — instead of silently cross-wiring
+    fingerprints or wedging an admitted slot."""
+    eng = _engine(cfg, params, n_slots=2, rns_verify=True)
+    eng.submit(Request(rid=7, prompt=[1, 2, 3], max_new=4))
+    with pytest.raises(ValueError, match="already holds verify state"):
+        eng.submit(Request(rid=7, prompt=[4, 5, 6], max_new=4))
+    done = eng.run_to_completion()  # the engine is NOT wedged
+    assert [r.rid for r in done] == [7]
+    # after draining, the rid is reusable
+    eng.drain_completed()
+    eng.submit(Request(rid=7, prompt=[1, 2], max_new=2))
+    assert len(eng.run_to_completion()) == 1
+
+
+def test_unsupported_families_are_gated(params):
+    ssm = get_config("mamba2-370m").smoke()
+    with pytest.raises(NotImplementedError, match="linear-KV"):
+        ContinuousBatcher(ssm, {}, n_slots=1, cache_len=16)
+    dense = get_config("gemma-2b").smoke()
+    quant = dataclasses.replace(dense, kv_quant=True)
+    with pytest.raises(NotImplementedError, match="int8"):
+        ContinuousBatcher(quant, {}, n_slots=1, cache_len=16)
+
+
+def test_oversized_request_fails_at_submit(cfg, params):
+    sch = SlotScheduler(n_slots=1, cache_len=8)
+    with pytest.raises(ValueError, match="exceeds"):
+        sch.submit(Request(rid=0, prompt=[1] * 6, max_new=4))
+
+
+def test_windowed_arch_lowers_to_masked_cache(params):
+    """gemma3's grouped ring cache lowers to the linear masked layout so
+    slots stay spliceable; the engine still streams correctly."""
+    cfg3 = get_config("gemma3-1b").smoke()
+    assert cfg3.window and cfg3.window_cache
+    p3 = init_params(cfg3, jax.random.key(2))
+    eng = ContinuousBatcher(cfg3, p3, n_slots=2, cache_len=CACHE_LEN,
+                            prefill_chunk=CHUNK)
+    assert not eng.cfg.window_cache
+    eng.submit(Request(rid=0, prompt=[4, 5, 6, 7], max_new=4))
+    done = eng.run_to_completion()
+    assert len(done[0].out) == 4
+
+
+def test_sharded_cache_placement(cfg, params):
+    """mesh= places the batched cache on cache_specs' layout (slots =
+    the batch axis over 'data'; trivially replicated on one device)."""
+    mesh = jax.make_mesh((1,), ("data",))
+    eng = _engine(cfg, params, mesh=mesh)
+    spec = eng.cache_pspecs["k"]
+    assert len(spec) == 5  # (L, slots, S, g, hd) rule applied
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new=3))
+    assert len(eng.run_to_completion()[0].out) == 3
