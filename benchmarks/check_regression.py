@@ -1,0 +1,67 @@
+"""Serve-bench regression gate for CI (DESIGN.md §13 tooling).
+
+Compares a freshly produced BENCH_serve.json against the committed
+baseline and FAILS (exit 1) when the paged-vs-monolithic throughput ratio
+of ``serve_paged_ratio`` drops more than ``--tolerance`` (default 20%)
+below the baseline's.  The ratio divides two tok/s numbers measured on the
+same host in the same process, so it is the one serve metric that is
+comparable between the CI runner and whatever machine committed the
+baseline — absolute ``us_per_call`` rows are trend data only and are never
+gated.
+
+    python benchmarks/check_regression.py BASELINE.json FRESH.json
+
+A baseline without the ratio row (pre-paging trajectory) passes with a
+note, so the gate arms itself on the first commit that carries one.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+RATIO_ROW = "serve_paged_ratio"
+
+
+def load_ratio(path: str) -> float | None:
+    """The throughput_ratio value of RATIO_ROW in ``path``, else None."""
+    with open(path) as f:
+        rows = json.load(f)
+    row = rows.get(RATIO_ROW)
+    if row is None:
+        return None
+    m = re.search(r"throughput_ratio=([0-9.]+)", row.get("derived", ""))
+    return float(m.group(1)) if m else None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail CI when the paged/monolithic serve throughput "
+                    "ratio regresses vs the committed baseline")
+    ap.add_argument("baseline", help="committed BENCH_serve.json")
+    ap.add_argument("fresh", help="BENCH_serve.json from this run")
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed fractional drop vs baseline (default 0.20)")
+    args = ap.parse_args(argv)
+
+    base = load_ratio(args.baseline)
+    fresh = load_ratio(args.fresh)
+    if base is None:
+        print(f"# {args.baseline} has no {RATIO_ROW} row (pre-paging "
+              f"baseline); gate passes vacuously")
+        return 0
+    if fresh is None:
+        print(f"FAIL: {args.fresh} lost its {RATIO_ROW} row — the paged "
+              f"serve bench did not run")
+        return 1
+    floor = base * (1.0 - args.tolerance)
+    verdict = "OK" if fresh >= floor else "FAIL"
+    print(f"{verdict}: paged/monolithic throughput ratio {fresh:.3f} vs "
+          f"baseline {base:.3f} (floor {floor:.3f} at "
+          f"{args.tolerance:.0%} tolerance)")
+    return 0 if fresh >= floor else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,6 +16,7 @@ additionally writes the same rows as machine-readable JSON (default
   rns_array_api        typed RnsArray frontend vs legacy dispatch (~0 cost)
   division_scaling     comparison-driven divmod / scaling costs
   serve_batching       continuous batching vs one-at-a-time serving
+  serve_paged          paged prefix-sharing pool vs the monolithic cache
 
 ``--json`` also splits the ``rns_array_*`` rows into BENCH_api.json and the
 ``serve_*`` rows into BENCH_serve.json so the typed-API overhead and the
@@ -446,6 +447,66 @@ def serve_batching():
          f"latency_ticks_batched={lat_b:.1f},solo={lat_s:.1f}")
 
 
+def serve_paged():
+    """Paged prefix-sharing pool (DESIGN.md §13) vs the monolithic slot
+    cache on the same workload: SERVE_REQS requests whose prompts share a
+    75%-length common prefix (the system-prompt serving shape).  The
+    committed gate metric is ``throughput_ratio`` — paged over monolithic
+    tok/s on the SAME host and pass, so it tracks paging overhead
+    machine-independently; ``pages_peak`` shows the dedup HBM win (shared
+    prefix pages counted once, vs full rows for every slot)."""
+    from repro.configs import get_config
+    from repro.launch.serve import simulate
+    from repro.models import init_params
+    from repro.serve.batcher import ContinuousBatcher
+    from repro.serve.scheduler import Request
+
+    cfg = get_config("gemma-2b").smoke()
+    params = init_params(cfg, jax.random.key(0))
+    cache_len, page, chunk, plen, max_new = 32, 8, 8, 16, 8
+    shared = plen * 3 // 4  # 75%-length common prefix
+
+    def workload():
+        rng = np.random.default_rng(21)
+        prefix = [int(t) for t in rng.integers(1, cfg.vocab, shared)]
+        return [
+            Request(
+                rid=i,
+                prompt=prefix + [int(t) for t in
+                                 rng.integers(1, cfg.vocab, plen - shared)],
+                max_new=max_new, arrival=0.0,
+            )
+            for i in range(SERVE_REQS)
+        ]
+
+    def run(page_size):
+        eng = ContinuousBatcher(
+            cfg, params, n_slots=4, cache_len=cache_len,
+            prefill_chunk=chunk, page_size=page_size,
+        )
+        simulate(eng, workload())        # warmup: compile + one full pass
+        n_warm = len(eng.sched.completed)
+        t0 = time.perf_counter()
+        simulate(eng, workload())
+        wall = time.perf_counter() - t0
+        done = eng.sched.completed[n_warm:]
+        toks = sum(len(r.out) for r in done)
+        return toks / wall, eng
+
+    tokps_p, eng_p = run(page)
+    tokps_m, _ = run(None)
+    st = eng_p.page_stats()
+    emit("serve_paged_tokps", 1e6 / tokps_p,
+         f"tok_per_s={tokps_p:.1f},pages_peak={st['pages_in_use_peak']},"
+         f"dedup_hits={st['dedup_hits']},cow_copies={st['cow_copies']}")
+    emit("serve_monolithic_tokps", 1e6 / tokps_m,
+         f"tok_per_s={tokps_m:.1f}")
+    emit("serve_paged_ratio", 0,
+         f"throughput_ratio={tokps_p/tokps_m:.3f},"
+         f"pages_peak={st['pages_in_use_peak']},"
+         f"pages_monolithic_equiv={4 * (cache_len // page)}")
+
+
 # --------------------------------------------------------- division/scaling
 def division_scaling():
     base = make_base(4, bits=8)
@@ -476,6 +537,7 @@ TABLES = [
     codec_correct,
     rns_array_api,
     serve_batching,
+    serve_paged,
     division_scaling,
 ]
 

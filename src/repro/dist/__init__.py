@@ -11,6 +11,7 @@ Modules:
 """
 from .act_sharding import constrain, current_mesh, use_mesh  # noqa: F401
 from .fault import (  # noqa: F401
+    WireStore,
     find_restorable,
     repair_packed,
     tensor_fingerprint,

@@ -12,9 +12,16 @@ a fingerprint mismatch can only trigger a rollback to the previous verified
 checkpoint, a codec built with ``GradCodec.make(correct=True)`` carries two
 redundant residue channels, so a single corrupted channel per element is
 located and CORRECTED in place (DESIGN.md §10) and the step keeps going.
+
+``WireStore`` packages the detect/locate-and-correct plumbing as a keyed
+store of typed ``RnsArray`` wire fingerprints — the serve engine keys it by
+request id (monolithic slot rows, DESIGN.md §12) or by physical cache page
+(the paged pool, DESIGN.md §13), where one stored codeword serves every
+reader of a shared page.
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import json
 import os
@@ -32,6 +39,7 @@ __all__ = [
     "scan_restorable",
     "find_restorable",
     "repair_packed",
+    "WireStore",
 ]
 
 
@@ -69,6 +77,89 @@ def repair_packed(codec, packed, *, wraps: int = 0,
         "unrecoverable": int(jnp.sum(fault == -2)),
     }
     return fixed, report
+
+
+class WireStore:
+    """Keyed store of typed RRNS wire fingerprints with detect/repair.
+
+    Each entry is a channel-major ``RnsArray`` codeword (the output of
+    ``codec.encode_array(..., channel_major=True)``) under an arbitrary
+    hashable key — the serve engine uses request ids for monolithic slot
+    rows and physical page ids for the paged pool, where ONE stored
+    codeword covers every reader of a shared page: corrupt it and every
+    reader's verify fails; repair it once and every reader re-verifies.
+
+    ``stats`` accumulates across the store's lifetime:
+      verified / failed           — ``matches`` outcomes (content checks)
+      wire_ok / wire_corrupt      — ``ok`` outcomes (codeword self-checks)
+      repaired / unrecoverable    — summed ``repair`` reports
+    """
+
+    def __init__(self, codec):
+        self.codec = codec
+        self.raw: dict = {}
+        self.stats = {"verified": 0, "failed": 0, "wire_ok": 0,
+                      "wire_corrupt": 0, "repaired": 0, "unrecoverable": 0}
+
+    def __contains__(self, key) -> bool:
+        return key in self.raw
+
+    def __len__(self) -> int:
+        return len(self.raw)
+
+    def keys(self):
+        return self.raw.keys()
+
+    def put(self, key, arr) -> None:
+        self.raw[key] = arr
+
+    def get(self, key):
+        return self.raw[key]
+
+    def pop(self, key, default=None):
+        return self.raw.pop(key, default)
+
+    def clear(self) -> None:
+        self.raw.clear()
+
+    def matches(self, key, fresh) -> bool:
+        """Bitwise compare a freshly encoded codeword against the stored
+        one — the content-integrity check (recomputed fingerprint vs the
+        fingerprint taken when the data froze)."""
+        ok = bool(jnp.array_equal(fresh.residues, self.raw[key].residues))
+        self.stats["verified" if ok else "failed"] += 1
+        return ok
+
+    def ok(self, key) -> bool:
+        """Codeword self-consistency of the stored buffer (redundant-
+        channel check) — detects corruption of the stored fingerprint
+        itself, without touching the fingerprinted data."""
+        good = bool(jnp.all(self.codec.verify_packed(self.raw[key])))
+        self.stats["wire_ok" if good else "wire_corrupt"] += 1
+        return good
+
+    def repair(self, key) -> dict:
+        """Locate-and-correct the stored codeword in place via
+        ``repair_packed``; returns the per-call report dict."""
+        fixed, report = repair_packed(self.codec, self.raw[key], wraps=0)
+        self.raw[key] = fixed
+        self.stats["repaired"] += report["repaired"]
+        self.stats["unrecoverable"] += report["unrecoverable"]
+        return report
+
+    def corrupt(self, key, channel: int = 0, delta: int = 1,
+                index: int = 0) -> None:
+        """Fault injection for tests/drivers: modular-bump one residue of
+        the stored codeword (stays a syntactically valid residue, so only
+        the redundant channels can catch it)."""
+        arr = self.raw[key]
+        mods = tuple(self.codec.base.moduli) + self.codec.redundant
+        m = mods[channel]
+        res = arr.residues
+        res = res.at[channel, index].set(
+            (res[channel, index] + jnp.int32(delta)) % m
+        )
+        self.raw[key] = dataclasses.replace(arr, residues=res)
 
 
 def tensor_fingerprint(arr) -> str:

@@ -188,9 +188,17 @@ _CACHE_RULES = {
 }
 
 
-def cache_specs(cache_abs, mesh):
+def cache_specs(cache_abs, mesh, *, paged_pool: bool = False):
     """PartitionSpec tree for a decode cache: batch over data, KV heads over
-    model when divisible; scan-stack dims and scalars replicated."""
+    model when divisible; scan-stack dims and scalars replicated.
+
+    ``paged_pool=True`` reads the k/v leaves as the PAGED pool layout
+    (L, n_pages, page_size, g, hd) — same canonical rank with the page
+    pool standing in for the batch axis and the within-page axis for the
+    sequence axis (DESIGN.md §13).  The rules carry over unchanged except
+    the GQA fallback: within-page offsets are far too small to shard, so
+    indivisible KV heads fall back on the page-POOL axis instead.
+    """
     sizes = dict(mesh.shape)
     data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     dsize = math.prod(sizes[a] for a in data_axes) if data_axes else 1
@@ -212,6 +220,18 @@ def cache_specs(cache_abs, mesh):
         if m_ax is not None and model > 1:
             if leaf.shape[extra + m_ax] % model == 0:
                 entries[extra + m_ax] = "model"
+            elif canon == 4 and paged_pool:
+                # paged-pool GQA fallback: pages are interchangeable, so
+                # spread the page-pool axis over "model" (stacking on top
+                # of any data-axis assignment when the divisibility holds)
+                # rather than the tiny within-page axis.
+                cur = entries[extra + b_ax]
+                if cur is None:
+                    if leaf.shape[extra + b_ax] % model == 0:
+                        entries[extra + b_ax] = "model"
+                elif leaf.shape[extra + b_ax] % (dsize * model) == 0:
+                    prev = cur if isinstance(cur, tuple) else (cur,)
+                    entries[extra + b_ax] = prev + ("model",)
             elif canon == 4 and leaf.shape[extra + 1] % model == 0:
                 # KV heads don't divide the model axis (GQA with few KV
                 # heads, e.g. 8 heads on a 16-wide axis): shard the SEQUENCE

@@ -23,6 +23,12 @@ config) and ``--no-smoke`` (run the full published config) are an explicit
 pair over one setting — exactly one applies, and the help text of each
 names the default.
 
+``--page-size N`` switches the engine onto the paged, prefix-sharing pool
+layout (DESIGN.md §13; ``--pages`` sizes the pool, ``--no-prefix-share``
+disables admission dedup) and adds a ``paging`` block to the report:
+pages in use / shared (dedup hits) / CoW copies, and the per-page
+fingerprint verify/repair counters under ``--rns-verify``.
+
 ``--rns-verify`` arms the engine's RnsArray cache-integrity fingerprints
 (verified at every retirement); ``--inject-wire-corrupt`` additionally
 corrupts one stored wire buffer after the run and demonstrates the
@@ -210,6 +216,17 @@ def main(argv=None) -> dict:
     ap.add_argument("--cache-len", type=int, default=128,
                     help="per-slot KV capacity (prompt + generated)")
     ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="switch to the paged pool layout with pages of "
+                         "this many tokens (DESIGN.md §13)")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="physical pages in the pool (default: full "
+                         "backing for every slot plus the parking page)")
+    ap.add_argument("--no-prefix-share", dest="prefix_share",
+                    action="store_false",
+                    help="disable admission-time prompt-prefix dedup "
+                         "(paged mode; measures pure paging)")
+    ap.set_defaults(prefix_share=True)
     ap.add_argument("--requests", type=int, default=8,
                     help="synthetic workload size (ignored with --trace)")
     ap.add_argument("--trace", default=None, metavar="FILE",
@@ -250,6 +267,8 @@ def main(argv=None) -> dict:
         engine = ContinuousBatcher(
             cfg, params, n_slots=args.slots, cache_len=args.cache_len,
             prefill_chunk=args.prefill_chunk, rns_verify=args.rns_verify,
+            page_size=args.page_size, n_pages=args.pages,
+            prefix_share=args.prefix_share,
         )
     except NotImplementedError as err:
         if args.rns_verify:
@@ -282,18 +301,25 @@ def main(argv=None) -> dict:
     }
     if engine is not None:
         report["jit_traces"] = engine.jit_cache_sizes()
+        if engine.paged:
+            report["paging"] = engine.page_stats()
     if args.rns_verify:
+        # wire keys: rids on the monolithic path (one per retired request,
+        # still stored), page ids on the paged path (only RETAINED shared
+        # pages outlive their readers — freed pages verified at release)
+        keys = (sorted(engine.wire.keys()) if engine.paged
+                else [r.rid for r in done])
         rns = {
             "slots_verified": sum(engine.verify_log.values()),
             "slots_failed": sum(not v for v in engine.verify_log.values()),
-            "wire_ok": sum(engine.wire_ok(r.rid) for r in done),
+            "wire_ok": sum(engine.wire_ok(k) for k in keys),
         }
-        if args.inject_wire_corrupt and done:
-            rid = done[0].rid
-            engine.corrupt_wire(rid, channel=1, delta=3)
-            rns["injected_detected"] = not engine.wire_ok(rid)
-            rns["injected_repair"] = engine.repair_wire(rid)
-            rns["injected_reverified"] = engine.wire_ok(rid)
+        if args.inject_wire_corrupt and keys:
+            key = keys[0]
+            engine.corrupt_wire(key, channel=1, delta=3)
+            rns["injected_detected"] = not engine.wire_ok(key)
+            rns["injected_repair"] = engine.repair_wire(key)
+            rns["injected_reverified"] = engine.wire_ok(key)
         report["rns"] = rns
 
     print(json.dumps(report, indent=1))

@@ -29,6 +29,7 @@ __all__ = [
     "attn_forward",
     "decode_attention",
     "attn_decode",
+    "attn_decode_paged",
 ]
 
 NEG_INF = -1e30
@@ -495,3 +496,51 @@ def attn_decode(
     if quant:
         out_cache["ks"], out_cache["vs"] = cache["ks"], cache["vs"]
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt)), out_cache
+
+
+def attn_decode_paged(
+    p, x, k_pool, v_pool, pages, pos, *, page_size, heads, kv, hd, theta,
+    window=None,
+):
+    """Cached decode through a page-table indirection (DESIGN.md §13).
+
+    Instead of one contiguous row per request, KV lives in a pooled buffer
+    of fixed-size pages — ``k_pool``/``v_pool``: (P, page_size, g, hd) —
+    and each row of ``pages`` (an int32 ``(b, n_pg)`` table, plain data so
+    remapping never retraces) names the physical pages that back the row's
+    logical positions 0..n_pg*page_size-1 in order.  Unmapped entries
+    point at the reserved parking page 0.
+
+    x: (b, s, d) with s >= 1 new tokens per row at per-row positions
+    ``pos`` (b,).  The s new K/V project+rope exactly like ``attn_decode``
+    and SCATTER to (page, offset) = (pos+i) divmod page_size through the
+    table; reads GATHER the table back into a (b, n_pg*page_size, g, hd)
+    logical row and reuse ``decode_attention`` unchanged.  Because
+    n_pg*page_size == cache_len, the gathered row has the same length,
+    ordering, and therefore reduction order as the monolithic layout —
+    junk in parked/unwritten pages sits behind the same NEG_INF mask that
+    hides unwritten cache zeros, so outputs are bitwise-identical to the
+    un-paged path.  No ring/quant/cross-attention support (the serve
+    engine lowers or gates those before reaching here).
+    """
+    dt = x.dtype
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    pos_arr = jnp.asarray(pos)
+    positions = jnp.broadcast_to(
+        jnp.reshape(pos_arr, (-1, 1)) + jnp.arange(s)[None, :], (b, s)
+    )
+    k_new = jnp.einsum("bsd,dgk->bsgk", x, p["wk"].astype(dt))
+    v_new = jnp.einsum("bsd,dgk->bsgk", x, p["wv"].astype(dt))
+    q = rope(q, positions, theta)
+    k_new = rope(k_new, positions, theta)
+    # scatter each new token to its (physical page, in-page offset)
+    pid = jnp.take_along_axis(pages, positions // page_size, axis=1)  # (b,s)
+    off = positions % page_size
+    k_pool = k_pool.at[pid, off].set(k_new.astype(k_pool.dtype))
+    v_pool = v_pool.at[pid, off].set(v_new.astype(v_pool.dtype))
+    n_pg = pages.shape[1]
+    k_rows = k_pool[pages].reshape(b, n_pg * page_size, kv, hd)
+    v_rows = v_pool[pages].reshape(b, n_pg * page_size, kv, hd)
+    o = decode_attention(q, k_rows, v_rows, pos_arr + s, window=window)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt)), k_pool, v_pool

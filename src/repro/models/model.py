@@ -65,9 +65,17 @@ def prefill(cfg: ModelConfig, params, batch, cache_len: int):
     raise ValueError(cfg.family)
 
 
-def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos,
+                pages=None, page_size=None):
+    if pages is not None and cfg.family not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"paged decode supports text-only linear-KV transformer "
+            f"families (dense/moe), not {cfg.family}"
+        )
     if cfg.family in _DENSE:
-        return transformer.decoder_only_decode(cfg, params, cache, tokens, pos)
+        return transformer.decoder_only_decode(
+            cfg, params, cache, tokens, pos, pages=pages, page_size=page_size
+        )
     if cfg.family == "encdec":
         return transformer.encdec_decode(cfg, params, cache, tokens, pos)
     if cfg.family == "ssm":
@@ -78,17 +86,19 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
 
 
 def extend_step(cfg: ModelConfig, params, cache, tokens, pos,
-                logit_index=None):
+                logit_index=None, pages=None, page_size=None):
     """Append a token chunk (b, C) at positions pos..pos+C-1 to a linear
     KV cache; returns (logits over all C positions — or just position
     ``logit_index`` when given — and the cache).  Text-only linear-cache
     transformer families — SSM/hybrid/encdec prefill state is not
     chunk-extendable through this API, and vlm is excluded because its
     cache layout reserves positions 0..n_patches-1 for the patch prefix
-    that only a full prefill can place."""
+    that only a full prefill can place.  ``pages``/``page_size`` route
+    the chunk through the paged pool layout (DESIGN.md §13)."""
     if cfg.family in ("dense", "moe"):
         return transformer.decoder_only_extend(
-            cfg, params, cache, tokens, pos, logit_index=logit_index
+            cfg, params, cache, tokens, pos, logit_index=logit_index,
+            pages=pages, page_size=page_size,
         )
     raise NotImplementedError(
         f"extend_step supports text-only linear-KV transformer families "

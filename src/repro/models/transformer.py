@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.dist.act_sharding import constrain
 
-from .attention import attn_decode, attn_forward, init_attn
+from .attention import attn_decode, attn_decode_paged, attn_forward, init_attn
 from .config import ModelConfig
 from .layers import embed, gated_mlp, init_linear, init_mlp, init_norm, rms_norm, unembed
 from .moe import init_moe, moe_forward
@@ -345,9 +345,58 @@ def _linear_cache_stack(cfg: ModelConfig, params, cache, x, pos):
     return rms_norm(x, params["final_norm"], cfg.norm_eps), kc, vc
 
 
-def decoder_only_decode(cfg: ModelConfig, params, cache, tokens, pos):
+def _paged_cache_stack(cfg: ModelConfig, params, pool, pages, x, pos,
+                       page_size: int):
+    """Scanned layer stack over the PAGED KV pool (DESIGN.md §13).
+
+    pool: {"k","v"}: (L, P, page_size, g, hd) — one pooled buffer of
+    physical pages shared by every slot; ``pages``: (b, n_pg) int32 page
+    table mapping each row's logical positions to physical pages.  The
+    body mirrors ``_linear_cache_stack`` operation-for-operation (same
+    norms, same residual order, same attention math on the gathered rows)
+    so paged and monolithic layouts produce bitwise-identical activations.
+    int8-quantized pools are not supported (the serve engine gates them).
+    """
+    assert "ks" not in pool, "paged pools are fp-only"
+    flags = jnp.asarray(global_flags(cfg))
+    akw = _attn_kwargs(cfg)
+
+    def body(x, xs):
+        pl, is_global, kc, vc = xs
+        wv = layer_window(cfg, is_global)
+        h = rms_norm(x, pl["ln1"], cfg.norm_eps)
+        o, kc, vc = attn_decode_paged(
+            pl["attn"], h, kc, vc, pages, pos, page_size=page_size,
+            window=wv, **akw,
+        )
+        x = x + o
+        h2 = rms_norm(x, pl["ln2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            y, _ = moe_forward(pl["moe"], cfg, h2)
+        else:
+            y = gated_mlp(h2, pl["mlp"]["wi"], pl["mlp"]["wo"], cfg.act)
+        return x + y, (kc, vc)
+
+    xs = (params["layers"], flags, pool["k"], pool["v"])
+    x, (kc, vc) = jax.lax.scan(body, x, xs)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), kc, vc
+
+
+def decoder_only_decode(cfg: ModelConfig, params, cache, tokens, pos,
+                        pages=None, page_size=None):
     """One decode step.  tokens: (b, 1); pos: scalar position of the new
-    token, or ``(b,)`` per-row positions (continuous-batching slots)."""
+    token, or ``(b,)`` per-row positions (continuous-batching slots).
+    With ``pages``/``page_size`` the cache is a paged pool and reads/
+    writes route through the page-table indirection (DESIGN.md §13)."""
+    if pages is not None:
+        dt = _dtype(cfg)
+        x = embed(tokens, params["embed"], dt)
+        x, kc, vc = _paged_cache_stack(cfg, params, cache, pages, x, pos,
+                                       page_size)
+        logits = unembed(x[:, 0], params["embed"])
+        out = dict(cache, k=kc, v=vc)
+        out["len"] = cache["len"] + 1
+        return logits, out
     if "lk" in cache:
         return _windowed_decode(cfg, params, cache, tokens, pos)
     dt = _dtype(cfg)
@@ -360,7 +409,7 @@ def decoder_only_decode(cfg: ModelConfig, params, cache, tokens, pos):
 
 
 def decoder_only_extend(cfg: ModelConfig, params, cache, tokens, pos,
-                        logit_index=None):
+                        logit_index=None, pages=None, page_size=None):
     """Chunked prefill-extend: append a CHUNK of tokens to a linear cache.
 
     tokens: (b, C) land at positions pos..pos+C-1 (pos scalar or per-row
@@ -373,6 +422,8 @@ def decoder_only_extend(cfg: ModelConfig, params, cache, tokens, pos,
     prefill cost, and only the last REAL prompt position's row is ever
     used; DESIGN.md §12).  Ring (grouped sliding-window) caches are not
     supported; serve lowers such archs to the masked linear-cache layout.
+    With ``pages``/``page_size`` the chunk lands in a paged pool through
+    the page-table indirection instead (DESIGN.md §13).
     """
     if "lk" in cache:
         raise NotImplementedError(
@@ -381,7 +432,11 @@ def decoder_only_extend(cfg: ModelConfig, params, cache, tokens, pos,
         )
     dt = _dtype(cfg)
     x = embed(tokens, params["embed"], dt)
-    x, kc, vc = _linear_cache_stack(cfg, params, cache, x, pos)
+    if pages is not None:
+        x, kc, vc = _paged_cache_stack(cfg, params, cache, pages, x, pos,
+                                       page_size)
+    else:
+        x, kc, vc = _linear_cache_stack(cfg, params, cache, x, pos)
     if logit_index is not None:
         x = jax.lax.dynamic_index_in_dim(x, logit_index, axis=1,
                                          keepdims=True)

@@ -25,16 +25,30 @@ axis) shard over the data axes, KV heads over "model" when divisible, and
 the GQA sequence-axis fallback applies unchanged because slots only ever
 index the batch axis.
 
+``page_size=`` switches the engine onto the PAGED pool layout
+(DESIGN.md §13): the cache becomes one pooled buffer of fixed-size pages,
+a host-side ``(n_slots, n_pg)`` page table (``PagedScheduler``) maps each
+slot's logical pages to physical ones, and admission deduplicates shared
+prompt prefixes — shared pages are refcounted read-only, the first write
+into one triggers a copy-on-write through a jitted page-copy graph.  The
+page table rides into the decode/extend graphs as DATA (an int32 array
+argument, never a trace constant), so the one-persistent-trace invariant
+carries over unchanged; prompts prefill straight into the pool through the
+table (no solo cache, no splice).
+
 ``rns_verify=True`` arms the RNS integrity path: at admission the engine
 fingerprints the slot's immutable prompt region (per-layer K/V sums) and
 encodes it through an RRNS ``GradCodec`` into a typed channel-major
-``RnsArray`` wire buffer.  Decode traffic never writes below a slot's
-prompt length, so at retirement the recomputed fingerprint must match
-bitwise — any mismatch means cross-slot clobbering.  The wire buffers
-themselves are locate-and-correct codewords: ``wire_ok`` detects a
-corrupted stored buffer via ``verify_packed`` and ``repair_wire`` rebuilds
-the bad channel in place with ``dist.fault.repair_packed`` — fault repair
-composed with serving (DESIGN.md §12).
+``RnsArray`` wire buffer, held in a ``dist.fault.WireStore`` keyed by
+request id — or, in paged mode, by PHYSICAL PAGE, so one codeword covers
+every reader of a shared page and is checked when the page is freed or
+evicted.  Decode traffic never writes below a slot's prompt length, so at
+retirement the recomputed fingerprint must match bitwise — any mismatch
+means cross-slot clobbering.  The wire buffers themselves are
+locate-and-correct codewords: ``wire_ok`` detects a corrupted stored
+buffer via ``verify_packed`` and ``repair_wire`` rebuilds the bad channel
+in place with ``dist.fault.repair_packed`` — fault repair composed with
+serving (DESIGN.md §12).
 
 Doctest — admit, stream, retire (a 5-token prompt, 4 greedy tokens)::
 
@@ -63,8 +77,8 @@ import numpy as np
 
 from repro.dist.sharding import cache_specs, named_shardings
 from repro.models import decode_step, extend_step
-from repro.serve.scheduler import Request, Slot, SlotScheduler
-from repro.serve.serve_step import cache_abstract
+from repro.serve.scheduler import PagedScheduler, Request, Slot, SlotScheduler
+from repro.serve.serve_step import cache_abstract, paged_pool_abstract
 
 __all__ = ["ContinuousBatcher"]
 
@@ -95,11 +109,22 @@ class ContinuousBatcher:
     rns_verify : arm the RnsArray cache-integrity fingerprints.
     mesh : optional ``jax.sharding.Mesh``; the batched cache is placed on
         ``dist.sharding.cache_specs``' layout over it.
+    page_size : switch to the paged pool layout with pages of this many
+        tokens (must divide ``cache_len`` and align with
+        ``prefill_chunk``).  None (default) keeps the monolithic slot-row
+        cache.
+    n_pages : physical pages in the pool (paged mode only).  Defaults to
+        ``1 + n_slots * (cache_len // page_size)`` — parking page plus
+        full backing for every slot, i.e. zero admission deferrals; a
+        smaller pool oversubscribes slots against pages.
+    prefix_share : admission-time prompt-prefix dedup via the content
+        registry (paged mode only); disable to measure pure paging.
     """
 
     def __init__(self, cfg, params, *, n_slots: int, cache_len: int,
                  prefill_chunk: int = 32, rns_verify: bool = False,
-                 mesh=None):
+                 mesh=None, page_size: int | None = None,
+                 n_pages: int | None = None, prefix_share: bool = True):
         cfg.validate()
         if cfg.family not in _SUPPORTED:
             raise NotImplementedError(
@@ -117,55 +142,139 @@ class ContinuousBatcher:
             # full-length layout is semantically identical (more HBM)
             cfg = dataclasses.replace(cfg, window_cache=False)
         if cache_len > 512 and cache_len % 512:
+            lo, hi = cache_len // 512 * 512, -(-cache_len // 512) * 512
             raise ValueError(
-                "cache_len beyond one flash chunk must be a multiple of "
-                "512 (prefill eval_shape runs the chunked attention)"
+                f"cache_len={cache_len} beyond one flash chunk must be a "
+                f"multiple of 512 (prefill eval_shape runs the chunked "
+                f"attention); nearest legal cache_len: {lo} or {hi}"
             )
+        divisors = [d for d in range(1, cache_len + 1) if cache_len % d == 0]
         if cache_len % prefill_chunk:
             # a prompt padded to the chunk grid could otherwise run past
             # the row and XLA's update-slice clamp would silently shift
             # the write window backwards over earlier positions
             raise ValueError(
                 f"prefill_chunk={prefill_chunk} must divide "
-                f"cache_len={cache_len}"
+                f"cache_len={cache_len}; valid prefill_chunk values: "
+                f"{divisors}"
             )
         self.cfg, self.params = cfg, params
-        self.prefill_chunk = int(prefill_chunk)
+        self.prefill_chunk = C = int(prefill_chunk)
         self.rns_verify = bool(rns_verify)
-        self.sched = SlotScheduler(n_slots, cache_len)
+        self.paged = page_size is not None
+        self.page_size = int(page_size) if self.paged else None
+
+        if self.paged:
+            ps = self.page_size
+            if cache_len % ps:
+                raise ValueError(
+                    f"page_size={ps} must divide cache_len={cache_len}; "
+                    f"valid page sizes: {divisors}"
+                )
+            if ps % C and C % ps:
+                # page-aligned OR chunk-aligned prefill writes; anything
+                # else makes every chunk straddle page ownership checks
+                legal = [d for d in divisors if d % C == 0 or C % d == 0]
+                raise ValueError(
+                    f"page_size={ps} must align with prefill_chunk={C} "
+                    f"(one must divide the other); chunk-compatible page "
+                    f"sizes for cache_len={cache_len}: {legal}"
+                )
+            if ps > 512 and ps % 512:
+                raise ValueError(
+                    f"page_size={ps} beyond one flash chunk must be a "
+                    f"multiple of 512 (the pool abstract runs the chunked "
+                    f"prefill per page); nearest legal page_size: "
+                    f"{ps // 512 * 512} or {-(-ps // 512) * 512}"
+                )
+            n_pg = cache_len // ps
+            if n_pages is None:
+                n_pages = 1 + n_slots * n_pg
+            min_pages = n_pg + 2
+            if n_pages < min_pages:
+                raise ValueError(
+                    f"n_pages={n_pages} cannot guarantee admission of one "
+                    f"max-length request: cache_len={cache_len} / "
+                    f"page_size={ps} = {n_pg} logical pages, plus the "
+                    f"parking page and one page of mid-page-divergence "
+                    f"headroom; minimum n_pages: {min_pages}"
+                )
+            self.n_pages = int(n_pages)
+            self.sched = PagedScheduler(
+                n_slots, cache_len, page_size=ps, n_pages=self.n_pages,
+                prefill_chunk=C, prefix_share=prefix_share,
+            )
+        else:
+            self.sched = SlotScheduler(n_slots, cache_len)
 
         params_abs = jax.tree_util.tree_map(
             lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), params
         )
-        solo_abs = cache_abstract(cfg, params_abs, 1, cache_len)
-        batch_abs = cache_abstract(cfg, params_abs, n_slots, cache_len)
-        self._solo_zero = _zero_cache(solo_abs)
-        self.cache = _zero_cache(batch_abs)
+        if self.paged:
+            pool_abs = paged_pool_abstract(
+                cfg, params_abs, self.n_pages, self.page_size
+            )
+            self._solo_zero = None
+            self.cache = _zero_cache(pool_abs)
+        else:
+            solo_abs = cache_abstract(cfg, params_abs, 1, cache_len)
+            pool_abs = cache_abstract(cfg, params_abs, n_slots, cache_len)
+            self._solo_zero = _zero_cache(solo_abs)
+            self.cache = _zero_cache(pool_abs)
         self.mesh = mesh
         if mesh is not None:
-            self.cache_pspecs = cache_specs(batch_abs, mesh)
+            self.cache_pspecs = cache_specs(
+                pool_abs, mesh, paged_pool=self.paged
+            )
             self.cache = jax.device_put(
                 self.cache, named_shardings(self.cache_pspecs, mesh)
             )
 
-        # The engine's four graphs — each traces exactly once per process
-        # because every argument keeps a fixed shape across admissions,
-        # retirements, and arbitrary slot occupancy.
-        self._extend_fn = jax.jit(
-            lambda p, c, t, pos, idx: extend_step(
-                cfg, p, c, t, pos, logit_index=idx
+        # The engine's jitted graphs — each traces exactly once per
+        # process because every argument keeps a fixed shape across
+        # admissions, retirements, and arbitrary slot occupancy (in paged
+        # mode the page table is an int32 ARRAY argument: its contents
+        # are data, never trace constants).
+        if self.paged:
+            psz = self.page_size
+            self._extend_fn = jax.jit(
+                lambda p, c, t, pos, idx, pg: extend_step(
+                    cfg, p, c, t, pos, logit_index=idx,
+                    pages=pg, page_size=psz,
+                )
             )
+            self._decode_fn = jax.jit(self._decode_paged_impl)
+            self._copy_fn = jax.jit(self._copy_impl)
+            self._insert_fn = None
+        else:
+            self._extend_fn = jax.jit(
+                lambda p, c, t, pos, idx: extend_step(
+                    cfg, p, c, t, pos, logit_index=idx
+                )
+            )
+            self._decode_fn = jax.jit(self._decode_impl)
+            self._insert_fn = jax.jit(self._insert_impl)
+            self._copy_fn = None
+        self._fp_fn = (
+            jax.jit(self._fp_paged_impl if self.paged else self._fp_impl)
+            if rns_verify else None
         )
-        self._decode_fn = jax.jit(self._decode_impl)
-        self._insert_fn = jax.jit(self._insert_impl)
-        self._fp_fn = jax.jit(self._fp_impl) if rns_verify else None
         if rns_verify:
+            from repro.dist.fault import WireStore
             from repro.dist.grad_codec import GradCodec
 
             # world=1: fingerprints are fresh encodings, wraps=0 repairs
             self.codec = GradCodec.make(world=1, correct=True)
-            self._wire: dict[int, object] = {}
+            # keyed by rid (monolithic rows) / physical page (paged pool)
+            self.wire = WireStore(self.codec)
+            self._page_span: dict[int, int] = {}
             self.verify_log: dict[int, bool] = {}
+
+    @property
+    def _wire(self) -> dict:
+        """Raw key -> RnsArray mapping of the wire store (rid-keyed on the
+        monolithic path, page-keyed on the paged path)."""
+        return self.wire.raw
 
     # ------------------------------------------------------ jitted graphs
     def _decode_impl(self, params, cache, tokens, pos):
@@ -202,19 +311,96 @@ class ContinuousBatcher:
             ))
         return jnp.concatenate(sums)
 
+    # ---------------------------------------------------- paged-pool graphs
+    def _decode_paged_impl(self, params, cache, tokens, pos, pages):
+        """Paged twin of ``_decode_impl``: the (n_slots, n_pg) page table
+        routes each row's read gather and token write (models/attention.py
+        ``attn_decode_paged``)."""
+        logits, cache = decode_step(
+            self.cfg, params, cache, tokens, pos,
+            pages=pages, page_size=self.page_size,
+        )
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    def _copy_impl(self, cache, src, dst):
+        """Copy physical page ``src`` over page ``dst`` on every pool leaf
+        — the device half of copy-on-write (traced page ids: one graph
+        serves every copy)."""
+        def one(leaf):
+            if getattr(leaf, "ndim", 0) < 2:
+                return leaf
+            page = jax.lax.dynamic_index_in_dim(
+                leaf, src, axis=1, keepdims=True
+            )
+            return jax.lax.dynamic_update_slice_in_dim(
+                leaf, page, dst, axis=1
+            )
+
+        return jax.tree_util.tree_map(one, cache)
+
+    def _fp_paged_impl(self, cache, pid, span):
+        """Per-layer masked K/V sums over physical page ``pid``'s prompt
+        span [0, span) -> (2L,) f32 fingerprint vector (paged twin of
+        ``_fp_impl``; one codeword per page, shared by all its readers)."""
+        valid = (jnp.arange(self.page_size) < span).astype(jnp.float32)
+        sums = []
+        for name in ("k", "v"):
+            page = jax.lax.dynamic_index_in_dim(
+                cache[name], pid, axis=1, keepdims=False
+            )  # (L, page, g, hd)
+            sums.append(jnp.sum(
+                page.astype(jnp.float32) * valid[None, :, None, None],
+                axis=(1, 2, 3),
+            ))
+        return jnp.concatenate(sums)
+
+    # ---------------------------------------------------- paged host glue
+    def _page_codeword(self, pid: int):
+        """Freshly recomputed RRNS codeword of page ``pid``'s stored
+        prompt span."""
+        fp = self._fp_fn(
+            self.cache, jnp.int32(pid), jnp.int32(self._page_span[pid])
+        )
+        return self.codec.encode_array(fp, channel_major=True)
+
+    def _exec_actions(self, actions: list) -> None:
+        """Execute a ``PagedScheduler.plan_write`` action list in order:
+        evictions verify-and-drop the page's fingerprint (its content is
+        still intact at this point), CoW runs the jitted page copy, fresh
+        allocs need no device work."""
+        for act in actions:
+            if act["op"] == "evict":
+                pid = act["pid"]
+                if self.rns_verify and pid in self.wire:
+                    self.wire.matches(pid, self._page_codeword(pid))
+                    self.wire.pop(pid)
+                    self._page_span.pop(pid, None)
+            elif act["op"] == "cow":
+                self.cache = self._copy_fn(
+                    self.cache, jnp.int32(act["src"]), jnp.int32(act["dst"])
+                )
+
     # ------------------------------------------------------ admission path
     def submit(self, req: Request) -> None:
-        if self.rns_verify and (
-            req.rid in self._wire
-            or any(q.rid == req.rid for q in self.sched.queue)
-        ):
-            # verify state is keyed on rid; refuse the collision before
-            # any slot is bound or device work runs
-            raise ValueError(
-                f"rid {req.rid} already holds verify state (queued, in "
-                f"flight, or retired-undrained); use unique rids, or "
-                f"drain_completed() between reuses"
+        if self.rns_verify:
+            held = (
+                req.rid in self.verify_log
+                or any(q.rid == req.rid for q in self.sched.queue)
+                or any(s.req is not None and s.req.rid == req.rid
+                       for s in self.sched.slots)
             )
+            if not self.paged:
+                # monolithic wires are rid-keyed, so the store itself
+                # tracks in-flight and retired-undrained rids
+                held = held or req.rid in self.wire
+            if held:
+                # verify state is keyed on rid; refuse the collision
+                # before any slot is bound or device work runs
+                raise ValueError(
+                    f"rid {req.rid} already holds verify state (queued, in "
+                    f"flight, or retired-undrained); use unique rids, or "
+                    f"drain_completed() between reuses"
+                )
         self.sched.submit(req)
 
     def try_admit(self, now: float = 0.0) -> list[Slot]:
@@ -232,6 +418,8 @@ class ContinuousBatcher:
             admitted.append(slot)
 
     def _prefill_into(self, slot: Slot, now: float) -> None:
+        if self.paged:
+            return self._prefill_into_paged(slot, now)
         req = slot.req
         prompt = [int(t) for t in req.prompt]
         plen, C = len(prompt), self.prefill_chunk
@@ -256,13 +444,75 @@ class ContinuousBatcher:
             fp = self._fp_fn(
                 self.cache, jnp.int32(slot.index), jnp.int32(plen)
             )
-            self._wire[req.rid] = self.codec.encode_array(
+            self.wire.put(req.rid, self.codec.encode_array(
                 fp, channel_major=True
-            )
+            ))
         if self.sched.start_decode(slot, first, now) and self.rns_verify:
             # instant retirement (one-token budget / immediate EOS) never
             # reaches step()'s retirement branch — verify here instead
             self.verify_log[req.rid] = self.verify_request(req)
+
+    def _prefill_into_paged(self, slot: Slot, now: float) -> None:
+        """Paged admission prefill: chunks write straight into the pool
+        through the slot's page-table row.  Positions below
+        ``slot.prefill_start`` are NOT recomputed — the scheduler mapped
+        registry pages holding that shared prefix at admission; each
+        chunk's write barrier (``plan_write``) allocates/CoWs the pages
+        the chunk lands on before its extend runs."""
+        req = slot.req
+        prompt = [int(t) for t in req.prompt]
+        plen, C = len(prompt), self.prefill_chunk
+        start = slot.prefill_start
+        n_chunks = -(-(plen - start) // C)
+        padded = prompt + [0] * (start + n_chunks * C - plen)
+        last = (plen - 1) - (start + (n_chunks - 1) * C)
+        for ci in range(n_chunks):
+            s0 = start + ci * C
+            self._exec_actions(self.sched.plan_write(slot, s0, C))
+            pages_row = jnp.asarray(
+                [self.sched.table[slot.index]], jnp.int32
+            )
+            toks = jnp.asarray([padded[s0:s0 + C]], jnp.int32)
+            idx = last if ci == n_chunks - 1 else 0
+            logits, self.cache = self._extend_fn(
+                self.params, self.cache, toks, jnp.int32(s0),
+                jnp.int32(idx), pages_row,
+            )
+        first = int(jnp.argmax(logits[0, 0]))
+        # publish fully-covered prompt pages for later admissions to share
+        self.sched.register_prompt(slot, prompt)
+        if self.rns_verify:
+            self._fingerprint_prompt_pages(slot, plen)
+        if self.sched.start_decode(slot, first, now):
+            self._retire_paged(req)
+
+    def _fingerprint_prompt_pages(self, slot: Slot, plen: int) -> None:
+        """Encode one RRNS codeword per prompt page of ``slot`` that does
+        not already carry one — shared registry pages keep their original
+        publisher's codeword (that sharing is the point: one wire entry
+        covers every reader)."""
+        ps = self.page_size
+        for lp, pid in self.sched.slot_pages(slot.index):
+            off = lp * ps
+            if off >= plen:
+                break  # decode-region pages are mutable: never fingerprinted
+            if pid in self.wire:
+                continue
+            self._page_span[pid] = min(ps, plen - off)
+            self.wire.put(pid, self._page_codeword(pid))
+
+    def _retire_paged(self, req: Request) -> None:
+        """Paged retirement: verify the request's prompt-page fingerprints
+        while its table row is still mapped, then release the row —
+        ``'freed'`` pages drop their codewords (already verified),
+        ``'retained'``/``'shared'`` pages keep them for future/current
+        readers."""
+        if self.rns_verify:
+            self.verify_log[req.rid] = self.verify_request(req)
+        for pid, disp in self.sched.release_pages(req.slot_index):
+            if disp == "freed" and self.rns_verify:
+                self.wire.pop(pid)
+                self._page_span.pop(pid, None)
 
     # --------------------------------------------------------- decode loop
     def step(self, now: float = 0.0) -> list[Request]:
@@ -271,13 +521,24 @@ class ContinuousBatcher:
         decoding = self.sched.decoding_slots()
         if not decoding:
             return []
+        if self.paged:
+            # write barrier for this step's one-token writes: page-boundary
+            # crossings allocate, divergence into a shared page CoWs —
+            # all BEFORE the table snapshot rides into the decode graph
+            for slot in decoding:
+                self._exec_actions(
+                    self.sched.plan_write(slot, slot.next_pos, 1)
+                )
         toks, poss = self.sched.step_rows()
-        nxt, self.cache = self._decode_fn(
+        step_args = [
             self.params,
             self.cache,
             jnp.asarray(toks, jnp.int32)[:, None],
             jnp.asarray(poss, jnp.int32),
-        )
+        ]
+        if self.paged:
+            step_args.append(jnp.asarray(self.sched.table, jnp.int32))
+        nxt, self.cache = self._decode_fn(*step_args)
         nxt = np.asarray(nxt)
         retired = []
         for slot in decoding:
@@ -285,7 +546,9 @@ class ContinuousBatcher:
             req = slot.req
             if self.sched.record_token(slot, int(nxt[slot.index]), now):
                 retired.append(req)
-                if self.rns_verify:
+                if self.paged:
+                    self._retire_paged(req)
+                elif self.rns_verify:
                     self.verify_log[req.rid] = self.verify_request(req)
         return retired
 
@@ -311,7 +574,10 @@ class ContinuousBatcher:
         done, self.sched.completed = self.sched.completed, []
         if self.rns_verify:
             for r in done:
-                self._wire.pop(r.rid, None)
+                if not self.paged:
+                    # paged wires are page-keyed and already released with
+                    # their pages at retirement
+                    self.wire.pop(r.rid, None)
                 self.verify_log.pop(r.rid, None)
         return done
 
@@ -321,11 +587,25 @@ class ContinuousBatcher:
         sizes = {
             "decode": self._decode_fn._cache_size(),
             "extend": self._extend_fn._cache_size(),
-            "insert": self._insert_fn._cache_size(),
         }
+        if self.paged:
+            sizes["copy"] = self._copy_fn._cache_size()
+        else:
+            sizes["insert"] = self._insert_fn._cache_size()
         if self._fp_fn is not None:
             sizes["fingerprint"] = self._fp_fn._cache_size()
         return sizes
+
+    def page_stats(self) -> dict:
+        """Pool / dedup / CoW counters (paged mode), plus the per-page
+        fingerprint verify/repair counters when ``rns_verify`` is armed —
+        the ``paging`` block of ``launch/serve.py --report``."""
+        if not self.paged:
+            raise RuntimeError("engine built without page_size=")
+        stats = self.sched.page_stats()
+        if self.rns_verify:
+            stats["fingerprints"] = dict(self.wire.stats)
+        return stats
 
     # ------------------------------------------------- RNS integrity path
     def _require_verify(self):
@@ -333,47 +613,51 @@ class ContinuousBatcher:
             raise RuntimeError("engine built without rns_verify=True")
 
     def verify_request(self, req: Request) -> bool:
-        """Recompute the prompt-region fingerprint of ``req``'s slot row
-        and compare its RNS encoding bitwise against the stored wire
-        buffer.  Valid until the slot row is reused by a later admission;
-        the engine calls this automatically at retirement."""
+        """Recompute ``req``'s prompt-region fingerprints and compare
+        their RNS encodings bitwise against the stored wire buffers.
+
+        Monolithic: one codeword over the slot row's [0, plen) region,
+        keyed by rid.  Paged: one codeword per mapped prompt PAGE of the
+        slot's table row (shared pages check against the original
+        publisher's codeword — the dedup dataflow of DESIGN.md §13).
+        Valid until the row/pages are reused by a later admission; the
+        engine calls this automatically at retirement."""
         self._require_verify()
+        if self.paged:
+            ok = True
+            for lp, pid in self.sched.slot_pages(req.slot_index):
+                if lp * self.page_size >= len(req.prompt):
+                    break  # decode-region pages carry no fingerprints
+                if pid in self.wire:
+                    ok &= self.wire.matches(pid, self._page_codeword(pid))
+            return ok
         fp = self._fp_fn(
             self.cache, jnp.int32(req.slot_index),
             jnp.int32(len(req.prompt)),
         )
         fresh = self.codec.encode_array(fp, channel_major=True)
-        stored = self._wire[req.rid]
-        return bool(jnp.array_equal(fresh.residues, stored.residues))
+        return self.wire.matches(req.rid, fresh)
 
-    def wire_ok(self, rid: int) -> bool:
-        """Codeword self-consistency of the stored wire buffer (RRNS
+    def wire_ok(self, key) -> bool:
+        """Codeword self-consistency of one stored wire buffer (RRNS
         redundant-channel check) — detects corruption of the stored
-        fingerprint itself, without touching the cache."""
+        fingerprint itself, without touching the cache.  ``key`` is a rid
+        on the monolithic path, a physical page id on the paged path."""
         self._require_verify()
-        return bool(jnp.all(self.codec.verify_packed(self._wire[rid])))
+        return self.wire.ok(key)
 
-    def repair_wire(self, rid: int) -> dict:
-        """Locate-and-correct the stored wire buffer in place via
-        ``dist.fault.repair_packed``; returns its report dict."""
-        from repro.dist.fault import repair_packed
-
+    def repair_wire(self, key) -> dict:
+        """Locate-and-correct one stored wire buffer in place via
+        ``dist.fault.repair_packed``; returns its report dict.  On the
+        paged path a shared page's buffer is repaired ONCE and every
+        reader re-verifies against the fixed codeword."""
         self._require_verify()
-        fixed, report = repair_packed(self.codec, self._wire[rid], wraps=0)
-        self._wire[rid] = fixed
-        return report
+        return self.wire.repair(key)
 
-    def corrupt_wire(self, rid: int, channel: int = 0, delta: int = 1,
+    def corrupt_wire(self, key, channel: int = 0, delta: int = 1,
                      index: int = 0) -> None:
         """Fault injection for tests/drivers: modular-bump one residue of
-        the stored wire buffer (stays a syntactically valid residue so the
+        a stored wire buffer (stays a syntactically valid residue so the
         corruption is only catchable by the redundant channels)."""
         self._require_verify()
-        arr = self._wire[rid]
-        mods = tuple(self.codec.base.moduli) + self.codec.redundant
-        m = mods[channel]
-        res = arr.residues
-        res = res.at[channel, index].set(
-            (res[channel, index] + jnp.int32(delta)) % m
-        )
-        self._wire[rid] = dataclasses.replace(arr, residues=res)
+        self.wire.corrupt(key, channel=channel, delta=delta, index=index)

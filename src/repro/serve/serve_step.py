@@ -14,7 +14,8 @@ import jax.numpy as jnp
 
 from repro.models import decode_step, prefill
 
-__all__ = ["make_prefill", "make_decode_step", "cache_abstract", "prompt_abstract"]
+__all__ = ["make_prefill", "make_decode_step", "cache_abstract",
+           "paged_pool_abstract", "prompt_abstract"]
 
 
 def make_prefill(cfg, cache_len: int):
@@ -59,3 +60,16 @@ def cache_abstract(cfg, params_abs, batch: int, cache_len: int):
         lambda p, b: prefill(cfg, p, b, cache_len), params_abs, prompt
     )
     return cache
+
+
+def paged_pool_abstract(cfg, params_abs, n_pages: int, page_size: int):
+    """Abstract PAGED pool pytree (DESIGN.md §13): k/v leaves of shape
+    (L, n_pages, page_size, g, hd).
+
+    Structurally this is just ``cache_abstract`` with the page pool
+    standing in for the batch axis and one page for the sequence axis —
+    pages are interchangeable fixed-size row fragments, so the pooled
+    buffer is literally a decode cache of ``n_pages`` tiny rows that the
+    page table recomposes into logical rows at gather time.
+    """
+    return cache_abstract(cfg, params_abs, n_pages, page_size)

@@ -1,0 +1,261 @@
+"""Paged, prefix-sharing KV cache invariants (DESIGN.md §13).
+
+The tier-1 contract of the paged pool under the continuous batcher:
+
+* BITWISE identity — requests sharing a system-prompt prefix through
+  deduplicated pages produce tokens AND a full logical KV row
+  bitwise-identical to solo un-paged runs (the gathered page-table view
+  equals the monolithic slot row);
+* PAGE savings — N requests sharing a 75%-length common prefix peak at
+  STRICTLY fewer physical pages than N monolithic rows would hold, under
+  the same persistent jitted decode step (no retrace, via jit cache
+  stats);
+* copy-on-write — a full-prefix admission that must write into a shared
+  page copies it first; the source page's readers are untouched;
+* eviction — recycling retained pages under pool pressure keeps every
+  retired fingerprint valid;
+* shared-fingerprint repair — a corrupted shared page codeword is
+  detected and repaired ONCE, after which every reader re-verifies;
+* validation — capacity errors report derived legal values, not just the
+  rejected inputs.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serve.batcher import ContinuousBatcher
+from repro.serve.scheduler import PagedScheduler, Request
+
+CACHE_LEN = 32
+CHUNK = 8
+PAGE = 8
+N_PG = CACHE_LEN // PAGE
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("gemma-2b").smoke()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(cfg, jax.random.key(0))
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("n_slots", 3)
+    kw.setdefault("cache_len", CACHE_LEN)
+    kw.setdefault("prefill_chunk", CHUNK)
+    kw.setdefault("page_size", PAGE)
+    return ContinuousBatcher(cfg, params, **kw)
+
+
+def _prefix_reqs(cfg, n, plen, shared, max_new, seed=3):
+    """n requests whose prompts share a ``shared``-token common prefix."""
+    rng = np.random.default_rng(seed)
+    prefix = [int(t) for t in rng.integers(1, cfg.vocab, shared)]
+    return [
+        Request(rid=i, prompt=prefix + [int(t) for t in rng.integers(
+            1, cfg.vocab, plen - shared)], max_new=max_new)
+        for i in range(n)
+    ]
+
+
+def _logical_rows(eng, table_row):
+    """Gather one slot's logical (L, cache_len, g, hd) K/V rows out of the
+    pool through a page-table row snapshot."""
+    pages = np.asarray(table_row)
+    rows = {}
+    for name in ("k", "v"):
+        pool = np.asarray(eng.cache[name])  # (L, P, page, g, hd)
+        L, _, page, g, hd = pool.shape
+        rows[name] = pool[:, pages].reshape(L, len(pages) * page, g, hd)
+    return rows
+
+
+def _solo_run(cfg, params, req, n_out):
+    """Un-paged single-slot reference: (tokens, k_row, v_row)."""
+    eng = ContinuousBatcher(cfg, params, n_slots=1, cache_len=CACHE_LEN,
+                            prefill_chunk=CHUNK)
+    eng.submit(Request(rid=req.rid, prompt=list(req.prompt),
+                       max_new=req.max_new))
+    done = eng.run_to_completion()
+    assert len(done) == 1
+    k = np.asarray(eng.cache["k"])[:, 0]
+    v = np.asarray(eng.cache["v"])[:, 0]
+    return done[0].out, k, v
+
+
+# ------------------------------------------------------ bitwise identity
+def test_shared_prefix_bitwise_tokens_and_kv(cfg, params):
+    """Three requests behind one system prefix: tokens and the FULL
+    logical KV (gathered through the page table) match solo un-paged runs
+    bitwise."""
+    reqs = _prefix_reqs(cfg, 3, plen=19, shared=16, max_new=6)
+    eng = _engine(cfg, params)
+    for r in reqs:
+        eng.submit(Request(rid=r.rid, prompt=list(r.prompt),
+                           max_new=r.max_new))
+    eng.try_admit()
+    assert eng.page_stats()["dedup_hits"] > 0  # prefix actually shared
+    # snapshot table rows while mapped (release zeroes them at retirement;
+    # page CONTENT stays intact because nothing else is admitted after)
+    tables = {r.rid: list(eng.sched.table[i]) for i, r in enumerate(reqs)}
+    while eng.sched.busy:
+        eng.step()
+    done = {r.rid: r for r in eng.sched.completed}
+
+    for r in reqs:
+        sout, sk, sv = _solo_run(cfg, params, r, len(done[r.rid].out))
+        assert done[r.rid].out == sout  # greedy tokens bitwise-identical
+        rows = _logical_rows(eng, tables[r.rid])
+        # the written region: prompt + all decode writes (the final
+        # generated token is never written back)
+        end = len(r.prompt) + len(sout) - 1
+        np.testing.assert_array_equal(rows["k"][:, :end], sk[:, :end])
+        np.testing.assert_array_equal(rows["v"][:, :end], sv[:, :end])
+
+
+def test_full_prefix_hit_cow_bitwise(cfg, params):
+    """A prompt that exactly equals already-registered pages must CoW the
+    final shared page (first-token logits need a write into it) and still
+    match the solo run bitwise."""
+    rng = np.random.default_rng(11)
+    prefix = [int(t) for t in rng.integers(1, cfg.vocab, 16)]
+    eng = _engine(cfg, params, prefill_chunk=4)
+    eng.submit(Request(rid="warm", prompt=prefix + [5], max_new=3))
+    eng.run_to_completion()
+    eng.submit(Request(rid="hit", prompt=list(prefix), max_new=4))
+    done = eng.run_to_completion()
+    assert eng.page_stats()["cow_copies"] >= 1
+    hit = [r for r in done if r.rid == "hit"][0]
+    sout, _, _ = _solo_run(cfg, params, hit, len(hit.out))
+    assert hit.out == sout
+
+
+# ----------------------------------------------------- page-count savings
+def test_75pct_shared_prefix_uses_strictly_fewer_pages(cfg, params):
+    """8 requests sharing a 75%-length common prefix peak at strictly
+    fewer physical pages than 8 monolithic rows (8 * n_pg), under ONE
+    persistent decode trace."""
+    n = 8
+    reqs = _prefix_reqs(cfg, n, plen=24, shared=18, max_new=8)
+    eng = _engine(cfg, params, n_slots=n, n_pages=1 + n * N_PG)
+    for r in reqs:
+        eng.submit(r)
+    eng.try_admit()
+    assert len(eng.sched.decoding_slots()) == n  # all co-resident
+    eng.run_to_completion()
+    st = eng.page_stats()
+    assert st["pages_in_use_peak"] < n * N_PG  # strictly fewer than rows
+    assert st["dedup_hits"] >= (n - 1) * (18 // PAGE)
+    sizes = eng.jit_cache_sizes()
+    assert sizes["decode"] == 1 and sizes["extend"] == 1  # no retrace
+
+
+def test_admission_defers_on_page_pressure(cfg, params):
+    """With a pool smaller than slots * n_pg, admission is gated by PAGES:
+    requests defer while reservations can't be covered, then admit as
+    retirements free pages — and everything still completes."""
+    eng = _engine(cfg, params, n_slots=4, n_pages=N_PG + 2)
+    for i in range(4):
+        eng.submit(Request(rid=i, prompt=[i * 7 + 1] * 12, max_new=6))
+    done = eng.run_to_completion()
+    assert len(done) == 4
+    assert eng.page_stats()["deferrals"] > 0
+    assert eng.page_stats()["pages_in_use"] == 0  # all released
+
+
+# ------------------------------------------------------------ fingerprints
+def test_eviction_and_reuse_keep_fingerprints_valid(cfg, params):
+    """Pool pressure evicts retained (registered) pages and recycles them;
+    every retirement's per-page verification still passes."""
+    eng = _engine(cfg, params, n_slots=2, n_pages=N_PG + 2,
+                  rns_verify=True)
+    for i in range(4):
+        eng.submit(Request(rid=i, prompt=[i * 3 + 2] * 12, max_new=6))
+    eng.run_to_completion()
+    st = eng.page_stats()
+    assert st["pages_evicted"] >= 1
+    assert all(eng.verify_log.values())
+    assert st["fingerprints"]["failed"] == 0
+    assert st["fingerprints"]["verified"] > 0
+
+
+def test_shared_page_corruption_repaired_once_for_all_readers(cfg, params):
+    """Corrupt the ONE stored codeword of a page shared by three readers:
+    detected via the redundant channels, repaired in place once, and every
+    reader's retirement verification passes against the fixed codeword."""
+    rng = np.random.default_rng(7)
+    prefix = [int(t) for t in rng.integers(1, cfg.vocab, PAGE)]
+    eng = _engine(cfg, params, rns_verify=True)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=prefix + [40 + i], max_new=4))
+    eng.try_admit()
+    shared = [p for p in range(eng.n_pages)
+              if eng.sched.alloc.refcount[p] > 1]
+    assert len(shared) == 1  # exactly the one deduplicated prefix page
+    pid = shared[0]
+    assert pid in eng.wire
+    eng.corrupt_wire(pid, channel=1, delta=3)
+    assert not eng.wire_ok(pid)  # redundant channels catch it
+    assert eng.repair_wire(pid) == {"repaired": 1, "unrecoverable": 0}
+    assert eng.wire_ok(pid)
+    eng.run_to_completion()
+    assert all(eng.verify_log.values())  # every reader re-verified
+    assert eng.wire.stats["repaired"] == 1
+
+
+# ---------------------------------------------------------------- sharding
+def test_paged_pool_shards_on_mesh(cfg, params):
+    """The pooled buffer takes ``cache_specs(paged_pool=True)``'s layout:
+    rank-5 leaves with the page-pool axis carrying the batch sharding."""
+    mesh = jax.make_mesh((1,), ("data",))
+    eng = _engine(cfg, params, mesh=mesh)
+    spec = eng.cache_pspecs["k"]
+    assert len(spec) == 5
+    eng.submit(Request(rid=0, prompt=[3, 1, 4, 1, 5], max_new=4))
+    done = eng.run_to_completion()
+    assert len(done[0].out) == 4
+
+
+# -------------------------------------------------------------- validation
+def test_capacity_errors_report_derived_legal_values(cfg, params):
+    """Constructor rejections name the legal values, not just the bad
+    inputs (page divisors, chunk-compatible sizes, pool minimums)."""
+    with pytest.raises(ValueError, match=r"valid page sizes: \[1, 2, 4, "):
+        _engine(cfg, params, page_size=5)
+    with pytest.raises(ValueError, match="chunk-compatible page sizes"):
+        # 32 % 24 and 24 % 32 both nonzero: neither grid contains the other
+        _engine(cfg, params, cache_len=96, page_size=32, prefill_chunk=24)
+    with pytest.raises(ValueError, match=f"minimum n_pages: {N_PG + 2}"):
+        _engine(cfg, params, n_pages=N_PG + 1)
+    with pytest.raises(ValueError,
+                       match=r"valid prefill_chunk values: \[1, 2, 4, "):
+        _engine(cfg, params, prefill_chunk=7)
+    with pytest.raises(ValueError, match="nearest legal cache_len: 512 or"):
+        _engine(cfg, params, cache_len=513, page_size=None)
+
+
+def test_scheduler_deferral_is_pure_host_logic():
+    """PagedScheduler admission math without any model: worst-case
+    reservation blocks the queue head until pages free up."""
+    s = PagedScheduler(4, 32, page_size=8, n_pages=6, prefill_chunk=8)
+    s.submit(Request(rid="a", prompt=list(range(24)), max_new=8, eos=-1))
+    a = s.admit_next()
+    assert a is not None
+    for st in range(0, 24, 8):
+        s.plan_write(a, st, 8)
+    s.submit(Request(rid="b", prompt=list(range(50, 70)), max_new=8,
+                     eos=-1))
+    assert s.admit_next() is None  # needs 4 pages, only 1 available
+    assert s.stats["deferrals"] == 1
+    s.release_pages(a.index)
+    s.slots[a.index].state = 0  # FREE
+    s.slots[a.index].req = None
+    assert s.admit_next() is not None  # pages back -> queue head admits
