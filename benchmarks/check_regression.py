@@ -4,9 +4,11 @@ Compares a freshly produced BENCH_serve.json against the committed
 baseline and FAILS (exit 1) when the paged-vs-monolithic throughput ratio
 of ``serve_paged_ratio`` drops more than ``--tolerance`` (default 20%)
 below the baseline's.  The ratio divides two tok/s numbers measured on the
-same host in the same process, so it is the one serve metric that is
+same host in the same process — each the best of several timed passes
+(``benchmarks/run.py`` ``SERVE_PASSES``), so one descheduled pass on a
+loaded shared runner cannot sink it — which makes it the one serve metric
 comparable between the CI runner and whatever machine committed the
-baseline — absolute ``us_per_call`` rows are trend data only and are never
+baseline; absolute ``us_per_call`` rows are trend data only and are never
 gated.
 
     python benchmarks/check_regression.py BASELINE.json FRESH.json

@@ -403,6 +403,7 @@ def rns_array_api():
 
 # --------------------------------------------------------------- serving
 SERVE_REQS = 8
+SERVE_PASSES = 3  # timed passes per engine; the gated ratio uses the best
 
 
 def serve_batching():
@@ -452,9 +453,11 @@ def serve_paged():
     cache on the same workload: SERVE_REQS requests whose prompts share a
     75%-length common prefix (the system-prompt serving shape).  The
     committed gate metric is ``throughput_ratio`` — paged over monolithic
-    tok/s on the SAME host and pass, so it tracks paging overhead
-    machine-independently; ``pages_peak`` shows the dedup HBM win (shared
-    prefix pages counted once, vs full rows for every slot)."""
+    tok/s on the SAME host, each the BEST of ``SERVE_PASSES`` timed passes
+    (one noisy pass on a loaded CI runner must not fail the gate), so it
+    tracks paging overhead machine-independently; ``pages_peak`` shows the
+    dedup HBM win (shared prefix pages counted once, vs full rows for
+    every slot)."""
     from repro.configs import get_config
     from repro.launch.serve import simulate
     from repro.models import init_params
@@ -485,13 +488,16 @@ def serve_paged():
             prefill_chunk=chunk, page_size=page_size,
         )
         simulate(eng, workload())        # warmup: compile + one full pass
-        n_warm = len(eng.sched.completed)
-        t0 = time.perf_counter()
-        simulate(eng, workload())
-        wall = time.perf_counter() - t0
-        done = eng.sched.completed[n_warm:]
-        toks = sum(len(r.out) for r in done)
-        return toks / wall, eng
+        best = 0.0
+        for _ in range(SERVE_PASSES):    # best-of-N rides out runner noise
+            n_warm = len(eng.sched.completed)
+            t0 = time.perf_counter()
+            simulate(eng, workload())
+            wall = time.perf_counter() - t0
+            done = eng.sched.completed[n_warm:]
+            toks = sum(len(r.out) for r in done)
+            best = max(best, toks / wall)
+        return best, eng
 
     tokps_p, eng_p = run(page)
     tokps_m, _ = run(None)

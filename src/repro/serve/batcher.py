@@ -268,6 +268,10 @@ class ContinuousBatcher:
             # keyed by rid (monolithic rows) / physical page (paged pool)
             self.wire = WireStore(self.codec)
             self._page_span: dict[int, int] = {}
+            # physical page -> rid whose prefill published its codeword,
+            # so corruption detected at EVICTION (no retiring request in
+            # hand) still lands in verify_log under a request id
+            self._page_pub: dict[int, object] = {}
             self.verify_log: dict[int, bool] = {}
 
     @property
@@ -367,12 +371,18 @@ class ContinuousBatcher:
         """Execute a ``PagedScheduler.plan_write`` action list in order:
         evictions verify-and-drop the page's fingerprint (its content is
         still intact at this point), CoW runs the jitted page copy, fresh
-        allocs need no device work."""
+        allocs need no device work.  An eviction-verify MISMATCH is cache
+        corruption caught at the last possible moment — it is recorded in
+        ``verify_log`` under the page's publisher rid (and in the wire
+        stats), not just counted."""
         for act in actions:
             if act["op"] == "evict":
                 pid = act["pid"]
                 if self.rns_verify and pid in self.wire:
-                    self.wire.matches(pid, self._page_codeword(pid))
+                    ok = self.wire.matches(pid, self._page_codeword(pid))
+                    pub = self._page_pub.pop(pid, None)
+                    if not ok:
+                        self.verify_log[pub] = False
                     self.wire.pop(pid)
                     self._page_span.pop(pid, None)
             elif act["op"] == "cow":
@@ -499,6 +509,7 @@ class ContinuousBatcher:
             if pid in self.wire:
                 continue
             self._page_span[pid] = min(ps, plen - off)
+            self._page_pub[pid] = slot.req.rid
             self.wire.put(pid, self._page_codeword(pid))
 
     def _retire_paged(self, req: Request) -> None:
@@ -513,6 +524,7 @@ class ContinuousBatcher:
             if disp == "freed" and self.rns_verify:
                 self.wire.pop(pid)
                 self._page_span.pop(pid, None)
+                self._page_pub.pop(pid, None)
 
     # --------------------------------------------------------- decode loop
     def step(self, now: float = 0.0) -> list[Request]:

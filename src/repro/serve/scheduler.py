@@ -357,9 +357,15 @@ class PrefixRegistry:
     getting decode writes and stay private), which is what makes
     registered pages immutable and safe to share.
 
-    Dropping an evicted page can orphan its children (their parent key
-    names a dead pid): they become unreachable to ``match`` and simply age
-    out of the LRU retained set in turn.
+    Dropping an evicted page takes its ENTIRE descendant subtree with it:
+    child keys name the parent's physical pid, so if an orphaned chain
+    survived and that pid were later re-allocated and re-registered for
+    different content, ``match`` would walk straight through the reused
+    pid into the stale chain and hand out pages whose KV was computed
+    under a different prefix.  Subtree-dropped descendants keep their
+    pool/fingerprint state (they stay in the allocator's retained set
+    until evicted through the normal verify path) — only their
+    reachability dies here.
 
     >>> reg = PrefixRegistry(page_size=2)
     >>> reg.add(None, (5, 6), pid=3); reg.add(3, (7, 8), pid=4)
@@ -369,12 +375,18 @@ class PrefixRegistry:
     [3]
     >>> reg.drop(3); reg.match([5, 6, 7, 8])   # parent evicted: no match
     []
+    >>> 4 in reg.by_pid                  # descendant chain died with it
+    False
+    >>> reg.add(None, (9, 9), pid=3)     # pid 3 reused for NEW content
+    >>> reg.match([9, 9, 7, 8])          # cannot resurrect the old chain
+    [3]
     """
 
     def __init__(self, page_size: int):
         self.page_size = page_size
         self.nodes: dict[tuple, int] = {}
         self.by_pid: dict[int, tuple] = {}
+        self.children: dict[int | None, set[int]] = {}
 
     def match(self, prompt: list) -> list[int]:
         """Physical pages of the longest registered chain covering the
@@ -394,11 +406,24 @@ class PrefixRegistry:
     def add(self, parent_key, toks: tuple, pid: int) -> None:
         self.nodes[(parent_key, toks)] = pid
         self.by_pid[pid] = (parent_key, toks)
+        self.children.setdefault(parent_key, set()).add(pid)
 
     def drop(self, pid: int) -> None:
-        node_key = self.by_pid.pop(pid, None)
-        if node_key is not None:
+        """Unregister ``pid`` AND its whole descendant subtree (children
+        are keyed by the raw parent pid, which the pool may reuse)."""
+        stack = [pid]
+        while stack:
+            p = stack.pop()
+            node_key = self.by_pid.pop(p, None)
+            if node_key is None:
+                continue
             self.nodes.pop(node_key, None)
+            siblings = self.children.get(node_key[0])
+            if siblings is not None:
+                siblings.discard(p)
+                if not siblings:
+                    del self.children[node_key[0]]
+            stack.extend(self.children.get(p, ()))
 
 
 class PagedScheduler(SlotScheduler):
@@ -505,8 +530,9 @@ class PagedScheduler(SlotScheduler):
             )
         pid, evicted = self.alloc.alloc()
         if evicted:
-            # a retained shareable page got recycled: its registry chain
-            # entry dies now; the engine verifies + drops its fingerprint
+            # a retained shareable page got recycled: its registry entry
+            # AND its descendant chain die now (the reused pid must never
+            # resurrect them); the engine verifies + drops its fingerprint
             # when it executes this action (content is still intact)
             if self.registry is not None:
                 self.registry.drop(pid)

@@ -13,7 +13,10 @@ The tier-1 contract of the paged pool under the continuous batcher:
 * copy-on-write — a full-prefix admission that must write into a shared
   page copies it first; the source page's readers are untouched;
 * eviction — recycling retained pages under pool pressure keeps every
-  retired fingerprint valid;
+  retired fingerprint valid, drops the evicted page's whole registry
+  subtree (a reused pid can never resurrect an orphan chain), and a
+  verify MISMATCH at eviction lands in ``verify_log`` under the page's
+  publisher rid;
 * shared-fingerprint repair — a corrupted shared page codeword is
   detected and repaired ONCE, after which every reader re-verifies;
 * validation — capacity errors report derived legal values, not just the
@@ -29,7 +32,12 @@ import repro  # noqa: F401
 from repro.configs import get_config
 from repro.models import init_params
 from repro.serve.batcher import ContinuousBatcher
-from repro.serve.scheduler import PagedScheduler, Request
+from repro.serve.scheduler import (
+    FREE,
+    PagedScheduler,
+    PrefixRegistry,
+    Request,
+)
 
 CACHE_LEN = 32
 CHUNK = 8
@@ -211,6 +219,47 @@ def test_shared_page_corruption_repaired_once_for_all_readers(cfg, params):
     assert eng.wire.stats["repaired"] == 1
 
 
+def test_registry_eviction_cannot_resurrect_orphan_chain():
+    """Evicting a registered page drops its ENTIRE descendant subtree:
+    children are keyed by the raw parent pid, so if the chain survived and
+    the pool reused that pid for different content, match() would walk
+    through the reused pid into stale pages whose KV was computed under a
+    different prefix (silently wrong tokens)."""
+    reg = PrefixRegistry(page_size=2)
+    reg.add(None, (1, 2), pid=3)
+    reg.add(3, (3, 4), pid=4)
+    reg.add(4, (5, 6), pid=5)
+    reg.drop(3)  # pid 3 evicted under pool pressure
+    assert reg.nodes == {} and reg.by_pid == {}  # whole chain unregistered
+    reg.add(None, (9, 9), pid=3)  # pool reuses pid 3 for NEW content
+    # the old descendants (pids 4, 5) must not ride behind the reused pid
+    assert reg.match([9, 9, 3, 4, 5, 6]) == [3]
+
+
+def test_eviction_verify_failure_lands_in_verify_log(cfg, params):
+    """Corrupt RETAINED pages' stored codewords, then force pool pressure
+    to evict them: the eviction-time mismatch is recorded in verify_log
+    under the pages' publisher rids, not just counted in wire stats."""
+    eng = _engine(cfg, params, n_slots=2, n_pages=N_PG + 2,
+                  rns_verify=True)
+    eng.submit(Request(rid=0, prompt=[2] * 12, max_new=6))
+    eng.submit(Request(rid=1, prompt=[5] * 12, max_new=6))
+    eng.run_to_completion()
+    assert eng.verify_log == {0: True, 1: True}
+    retained = list(eng.sched.alloc.retained)
+    assert retained  # registered prefix pages parked for reuse
+    pubs = {eng._page_pub[pid] for pid in retained}
+    for pid in retained:
+        eng.corrupt_wire(pid, channel=1, delta=3)  # stored codeword rots
+    for i in (2, 3):  # distinct prompts: no dedup revival, pure pressure
+        eng.submit(Request(rid=i, prompt=[i * 3 + 2] * 12, max_new=6))
+    eng.run_to_completion()
+    assert eng.page_stats()["pages_evicted"] >= 1
+    bad = [r for r, ok in eng.verify_log.items() if not ok]
+    assert bad and set(bad) <= pubs  # surfaced under the publisher rid(s)
+    assert eng.wire.stats["failed"] >= 1
+
+
 # ---------------------------------------------------------------- sharding
 def test_paged_pool_shards_on_mesh(cfg, params):
     """The pooled buffer takes ``cache_specs(paged_pool=True)``'s layout:
@@ -256,6 +305,8 @@ def test_scheduler_deferral_is_pure_host_logic():
     assert s.admit_next() is None  # needs 4 pages, only 1 available
     assert s.stats["deferrals"] == 1
     s.release_pages(a.index)
-    s.slots[a.index].state = 0  # FREE
+    s.slots[a.index].state = FREE
     s.slots[a.index].req = None
-    assert s.admit_next() is not None  # pages back -> queue head admits
+    admitted = s.admit_next()  # pages back -> queue head admits
+    assert admitted is not None
+    assert admitted.index == a.index  # ...into the actually-released slot
