@@ -1,20 +1,28 @@
-"""Serve-bench regression gate for CI (DESIGN.md §13 tooling).
+"""Bench regression gate for CI (DESIGN.md §13/§14 tooling).
 
-Compares a freshly produced BENCH_serve.json against the committed
-baseline and FAILS (exit 1) when the paged-vs-monolithic throughput ratio
-of ``serve_paged_ratio`` drops more than ``--tolerance`` (default 20%)
-below the baseline's.  The ratio divides two tok/s numbers measured on the
-same host in the same process — each the best of several timed passes
-(``benchmarks/run.py`` ``SERVE_PASSES``), so one descheduled pass on a
-loaded shared runner cannot sink it — which makes it the one serve metric
-comparable between the CI runner and whatever machine committed the
-baseline; absolute ``us_per_call`` rows are trend data only and are never
-gated.
+Compares a freshly produced bench JSON against the committed baseline and
+FAILS (exit 1) when the gated ratio drops more than ``--tolerance``
+(default 20%) below the baseline's.  Gated rows hold RATIOS of two
+wall-time numbers measured on the same host in the same process — each
+the best of several timed passes (``benchmarks/run.py`` ``SERVE_PASSES``),
+so one descheduled pass on a loaded shared runner cannot sink them —
+which makes them the only bench metrics comparable between the CI runner
+and whatever machine committed the baseline; absolute ``us_per_call``
+rows are trend data only and are never gated.
 
+    # default: the paged-vs-monolithic serve throughput ratio
     python benchmarks/check_regression.py BASELINE.json FRESH.json
 
-A baseline without the ratio row (pre-paging trajectory) passes with a
-note, so the gate arms itself on the first commit that carries one.
+    # the async-checkpointer gate: machine-independent ABSOLUTE floor
+    python benchmarks/check_regression.py BENCH_ckpt.json FRESH.json \\
+        --row ckpt_async_ratio --key overlap_ratio --floor 1.0
+
+``--row``/``--key`` select which row's ``derived`` field carries the
+ratio; ``--floor`` swaps the relative-to-baseline check for an absolute
+one (the fresh value itself must clear the floor — right for ratios whose
+meaningful bound is a constant, like overlap >= 1.0).  A baseline without
+the gated row passes with a note, so each gate arms itself on the first
+commit that carries its row.
 """
 from __future__ import annotations
 
@@ -24,42 +32,57 @@ import re
 import sys
 
 RATIO_ROW = "serve_paged_ratio"
+RATIO_KEY = "throughput_ratio"
 
 
-def load_ratio(path: str) -> float | None:
-    """The throughput_ratio value of RATIO_ROW in ``path``, else None."""
+def load_ratio(path: str, row: str, key: str) -> float | None:
+    """The ``key=<float>`` value in ``row``'s derived field, else None."""
     with open(path) as f:
         rows = json.load(f)
-    row = rows.get(RATIO_ROW)
-    if row is None:
+    entry = rows.get(row)
+    if entry is None:
         return None
-    m = re.search(r"throughput_ratio=([0-9.]+)", row.get("derived", ""))
+    m = re.search(rf"{re.escape(key)}=([0-9.]+)", entry.get("derived", ""))
     return float(m.group(1)) if m else None
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
-        description="fail CI when the paged/monolithic serve throughput "
-                    "ratio regresses vs the committed baseline")
-    ap.add_argument("baseline", help="committed BENCH_serve.json")
-    ap.add_argument("fresh", help="BENCH_serve.json from this run")
+        description="fail CI when a gated bench ratio regresses vs the "
+                    "committed baseline (or an absolute --floor)")
+    ap.add_argument("baseline", help="committed bench JSON")
+    ap.add_argument("fresh", help="bench JSON from this run")
+    ap.add_argument("--row", default=RATIO_ROW,
+                    help=f"gated row name (default {RATIO_ROW})")
+    ap.add_argument("--key", default=RATIO_KEY,
+                    help=f"ratio key inside the row's derived field "
+                         f"(default {RATIO_KEY})")
     ap.add_argument("--tolerance", type=float, default=0.20,
                     help="allowed fractional drop vs baseline (default 0.20)")
+    ap.add_argument("--floor", type=float, default=None,
+                    help="absolute floor for the FRESH value instead of the "
+                         "relative-to-baseline check (machine-independent "
+                         "ratios only)")
     args = ap.parse_args(argv)
 
-    base = load_ratio(args.baseline)
-    fresh = load_ratio(args.fresh)
+    base = load_ratio(args.baseline, args.row, args.key)
+    fresh = load_ratio(args.fresh, args.row, args.key)
     if base is None:
-        print(f"# {args.baseline} has no {RATIO_ROW} row (pre-paging "
+        print(f"# {args.baseline} has no {args.row} row (pre-{args.key} "
               f"baseline); gate passes vacuously")
         return 0
     if fresh is None:
-        print(f"FAIL: {args.fresh} lost its {RATIO_ROW} row — the paged "
-              f"serve bench did not run")
+        print(f"FAIL: {args.fresh} lost its {args.row} row — the gated "
+              f"bench did not run")
         return 1
+    if args.floor is not None:
+        verdict = "OK" if fresh >= args.floor else "FAIL"
+        print(f"{verdict}: {args.row} {args.key} {fresh:.3f} vs absolute "
+              f"floor {args.floor:.3f} (baseline carried {base:.3f})")
+        return 0 if fresh >= args.floor else 1
     floor = base * (1.0 - args.tolerance)
     verdict = "OK" if fresh >= floor else "FAIL"
-    print(f"{verdict}: paged/monolithic throughput ratio {fresh:.3f} vs "
+    print(f"{verdict}: {args.row} {args.key} {fresh:.3f} vs "
           f"baseline {base:.3f} (floor {floor:.3f} at "
           f"{args.tolerance:.0%} tolerance)")
     return 0 if fresh >= floor else 1

@@ -141,7 +141,8 @@ def lower_cell(arch: str, shape_name: str, mesh, *, microbatches: int = 1,
                 grad_shardings=None if os.environ.get("RNS_NO_GRAD_PIN") else psh,
             )
             msh = named_shardings(
-                {k: P() for k in ("loss", "ce", "aux", "gnorm")}, mesh
+                {k: P() for k in ("loss", "ce", "aux", "gnorm", "opt_step")},
+                mesh
             )
             jitted = jax.jit(
                 step,

@@ -245,7 +245,18 @@ def main(argv=None) -> dict:
                     help="write the report dict as JSON")
     ap.add_argument("--save-trace", default=None, metavar="PATH",
                     help="write the workload as a replayable JSONL trace")
+    ap.add_argument("--warm-restart", default=None, metavar="DIR",
+                    help="warm-restart state dir (needs --page-size and "
+                         "--rns-verify): restore + revalidate the previous "
+                         "run's retained prefix pages before serving, and "
+                         "persist this run's pool state there afterwards "
+                         "(DESIGN.md §14)")
     args = ap.parse_args(argv)
+    if args.warm_restart and (args.page_size is None or not args.rns_verify
+                              or not args.prefix_share):
+        ap.error("--warm-restart needs --page-size, --rns-verify, and "
+                 "prefix sharing (the persisted state IS the retained "
+                 "pages plus their RRNS fingerprints)")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -276,6 +287,19 @@ def main(argv=None) -> dict:
         print(f"# {cfg.name}: {err}")
         print("# falling back to single-shot sequential serving")
         engine = None
+    warm = None
+    if args.warm_restart and engine is not None:
+        try:
+            warm = dict(engine.load_warm_state(args.warm_restart),
+                        restored=True)
+            print(f"# warm restart: adopted {warm['adopted']} of "
+                  f"{warm['pages_saved']} persisted page(s), "
+                  f"repaired {warm['repaired_pages']}, "
+                  f"dropped {warm['dropped']}")
+        except FileNotFoundError:
+            warm = {"restored": False}  # first run: nothing saved yet
+            print(f"# warm restart: no state under {args.warm_restart} "
+                  f"yet (cold start)")
     t0 = time.time()
     if engine is not None:
         counters = simulate(engine, reqs)
@@ -321,6 +345,13 @@ def main(argv=None) -> dict:
             rns["injected_repair"] = engine.repair_wire(key)
             rns["injected_reverified"] = engine.wire_ok(key)
         report["rns"] = rns
+
+    if args.warm_restart and engine is not None:
+        engine.drain_completed()  # idle the engine before snapshotting
+        saved = engine.save_warm_state(args.warm_restart)
+        report["warm_restart"] = dict(warm or {}, **saved)
+        print(f"# warm restart: persisted {saved['pages_saved']} retained "
+              f"page(s) to {args.warm_restart}")
 
     print(json.dumps(report, indent=1))
     if args.report:

@@ -2,19 +2,27 @@
 
 Runs REAL steps on whatever devices exist (CPU smoke configs by default;
 the same code path pjit-shards on a TPU mesh).  Demonstrates the
-fault-tolerance loop: resume from the newest fingerprint-valid checkpoint,
-async atomic saves, and a step-time watchdog (straggler hook).
+fault-tolerance loop: resume from the newest repairable checkpoint (RRNS
+repair-on-restore, DESIGN.md §14), policy-driven async saves on a single
+background writer, and a step-time watchdog (straggler hook).
 
     PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --smoke \
-        --steps 30 --ckpt-dir /tmp/ck --save-every 10 [--rns-allreduce]
+        --steps 30 --ckpt-dir /tmp/ck --ckpt-policy 2@10,5,60s \
+        --ckpt-keep 3 [--rns-allreduce]
 
     # RRNS locate-and-correct transport with an injected wire corruption
     PYTHONPATH=src python -m repro.launch.train --arch mamba2-370m --smoke \
         --steps 4 --rns-correct --inject-corrupt-step 2
+
+    # corrupt one RRNS channel of the newest checkpoint, then watch the
+    # restore repair it in stride (2 channels: refuse + fall back)
+    PYTHONPATH=src python -m repro.launch.train --smoke --steps 10 \
+        --ckpt-dir /tmp/ck --inject-ckpt-corrupt 1
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -24,7 +32,7 @@ import numpy as np
 import repro  # noqa: F401  (x64)
 from repro.configs import get_config
 from repro.models import init_params
-from repro.train import checkpoint as ckpt
+from repro.train import checkpointer as ckpt
 from repro.train.data import Prefetcher, SyntheticLM
 from repro.train.optimizer import AdamWConfig, adamw_init
 from repro.train.train_step import make_train_step
@@ -86,6 +94,18 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--save-every", type=int, default=10)
+    ap.add_argument("--ckpt-policy", default="",
+                    help="save-policy grammar 'N | N@M | Ns | Nm, ...' "
+                         "(e.g. '2@10,5,60s'); overrides --save-every")
+    ap.add_argument("--ckpt-keep", type=int, default=0,
+                    help="retention GC: keep only the newest K committed "
+                         "steps (0 = keep everything)")
+    ap.add_argument("--inject-ckpt-corrupt", type=int, default=0,
+                    metavar="K",
+                    help="corrupt K RRNS channels of the newest saved "
+                         "checkpoint before restoring: 1 demonstrates "
+                         "locate-and-correct, 2 the refuse-and-fall-back "
+                         "path (needs --ckpt-dir)")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--rns-allreduce", action="store_true",
                     help="use the paper's RNS gradient aggregation (DP demo)")
@@ -106,6 +126,9 @@ def main(argv=None):
     if args.inject_corrupt_step >= 0 and not args.rns_correct:
         ap.error("--inject-corrupt-step needs --rns-correct (there is no "
                  "repair path to demonstrate without it)")
+    if args.inject_ckpt_corrupt and not args.ckpt_dir:
+        ap.error("--inject-ckpt-corrupt needs --ckpt-dir (there is no "
+                 "checkpoint to corrupt without one)")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -118,19 +141,39 @@ def main(argv=None):
     start_step = 0
 
     if args.ckpt_dir:
+        if args.inject_ckpt_corrupt:
+            latest = ckpt.discover_latest(args.ckpt_dir)
+            if latest is None:
+                ap.error("--inject-ckpt-corrupt: nothing saved under "
+                         f"{args.ckpt_dir} yet")
+            ckpt.inject_channel_corruption(
+                os.path.join(args.ckpt_dir, f"step_{latest}"),
+                leaf=0, channels=tuple(range(args.inject_ckpt_corrupt)),
+            )
+            print(f"[inject] corrupted {args.inject_ckpt_corrupt} RRNS "
+                  f"channel(s) of step {latest}, leaf 0, element 0")
         abs_tree = jax.tree_util.tree_map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
             {"params": params, "opt": opt_state},
         )
         try:
             # restore directly (one scan+read+hash of the checkpoint);
-            # probing latest_step first would read and hash it all twice
-            tree, start_step, _ = ckpt.restore(args.ckpt_dir, abs_tree)
+            # probing latest first would read and decode it all twice
+            tree, start_step, extra, rep = ckpt.restore(
+                args.ckpt_dir, abs_tree)
         except FileNotFoundError:
             pass  # fresh run: nothing restorable yet
         else:
             params, opt_state = tree["params"], tree["opt"]
-            print(f"[resume] restored fingerprint-valid step {start_step}")
+            print(f"[resume] restored step {start_step}: "
+                  f"{rep['leaves']} leaves, "
+                  f"repaired_leaves={rep['repaired_leaves']} "
+                  f"repaired_elements={rep['repaired_elements']} "
+                  f"steps_skipped={rep['steps_skipped']}")
+            opt_step = int(np.asarray(opt_state["step"]))
+            if opt_step != start_step:
+                print(f"[resume] WARNING: optimizer step {opt_step} != "
+                      f"checkpoint step {start_step}")
 
     inject_fn = None
     if args.rns_allreduce or args.rns_correct:
@@ -159,7 +202,14 @@ def main(argv=None):
 
     loader = SyntheticLM(cfg, seq=args.seq, batch=args.batch)
     prefetch = Prefetcher(loader, start_step=start_step)
-    pending_save = None
+    saver = None
+    if args.ckpt_dir:
+        policy = args.ckpt_policy or str(args.save_every)
+        saver = ckpt.Checkpointer(args.ckpt_dir, policy,
+                                  keep=args.ckpt_keep or None)
+        print(f"[ckpt] policy {policy!r}, "
+              f"keep {'all' if not args.ckpt_keep else args.ckpt_keep}, "
+              f"async RRNS-coded saves under {args.ckpt_dir}")
     times = []
     try:
         for _ in range(start_step, args.steps):
@@ -188,17 +238,14 @@ def main(argv=None):
                       f"single-channel repair — checkpoint rollback advised")
             print(f"step {step:4d} loss={metrics['loss']:.4f} "
                   f"gnorm={metrics['gnorm']:.3f} {dt*1e3:.0f}ms")
-            if args.ckpt_dir and (step + 1) % args.save_every == 0:
-                if pending_save is not None:
-                    pending_save.join()
-                pending_save = ckpt.save_async(
-                    args.ckpt_dir, step + 1,
-                    {"params": params, "opt": opt_state},
-                )
+            if saver is not None:
+                saver.maybe_save(step + 1,
+                                 {"params": params, "opt": opt_state},
+                                 extra={"opt_step": int(metrics["opt_step"])})
     finally:
         prefetch.close()
-        if pending_save is not None:
-            pending_save.join()
+        if saver is not None:
+            saver.close()  # drain the queue; re-raise any failed save
     print("done")
     return params
 

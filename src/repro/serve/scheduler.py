@@ -330,6 +330,23 @@ class PageAllocator:
                                             self.in_use + 1)
         self.refcount[pid] += 1
 
+    def adopt_retained(self, pid: int) -> None:
+        """Warm-restart seeding (DESIGN.md §14): move a FREE page straight
+        into the retained LRU set, as if a previous process had published
+        and released it.  Only legal on a pristine pool — the caller
+        (batcher.load_warm_state) restores page CONTENT separately.
+
+        >>> al = PageAllocator(4)
+        >>> al.adopt_retained(2); al.is_retained(2), al.available
+        (True, 3)
+        >>> al.alloc(), al.alloc(), al.alloc()   # 2 evicts last, LRU order
+        ((1, False), (3, False), (2, True))
+        """
+        if self.refcount[pid] != 0 or pid not in self.free:
+            raise ValueError(f"page {pid} is not free — cannot adopt")
+        self.free.remove(pid)
+        self.retained[pid] = None
+
     def deref(self, pid: int, *, retain: bool) -> str:
         """Drop a reader; returns the page's disposition — ``'shared'``
         (readers remain), ``'retained'`` (refcount 0 but registered: parked
@@ -621,6 +638,22 @@ class PagedScheduler(SlotScheduler):
                       and pid in self.registry.by_pid)
             out.append((pid, self.alloc.deref(pid, retain=retain)))
         return out
+
+    # ------------------------------------------------------ warm restart
+    def adopt_page(self, pid: int, parent_key, toks: tuple) -> None:
+        """Seed one revalidated page from a previous process's warm state:
+        pool side becomes retained (evictable LRU), registry side becomes
+        a chain node under ``parent_key`` — exactly the state the page
+        held when the old process released it.  Parents must be adopted
+        before children (chain keys name the parent's physical pid)."""
+        if self.registry is None:
+            raise RuntimeError("prefix sharing disabled: nothing to adopt")
+        if parent_key is not None and parent_key not in self.registry.by_pid:
+            raise ValueError(
+                f"page {pid}: parent {parent_key} not adopted — restore "
+                f"chains parents-first")
+        self.alloc.adopt_retained(pid)
+        self.registry.add(parent_key, tuple(toks), pid)
 
     # ------------------------------------------------------------- stats
     def page_stats(self) -> dict:

@@ -3,3 +3,5 @@ from .optimizer import AdamWConfig, adamw_init, adamw_update  # noqa: F401
 from .train_step import make_loss_fn, make_train_step  # noqa: F401
 from .data import SyntheticLM, Prefetcher  # noqa: F401
 from . import checkpoint  # noqa: F401
+from . import checkpointer  # noqa: F401
+from .checkpointer import Checkpointer, SavePolicy, parse_policy  # noqa: F401

@@ -1,12 +1,23 @@
 """Checkpointing: atomic, async-capable, fingerprint-verified, elastic.
 
 Layout:   <dir>/step_<N>/{0.npy, 1.npy, ..., manifest.json}
-Atomicity: written into step_<N>.tmp then os.rename'd — a crash mid-save
-leaves no manifest at the final path, so restore skips it.
+Atomicity: written into step_<N>.tmp, every file (and the directory entry)
+fsync'd, then os.replace'd — a crash mid-save leaves no manifest at the
+final path, so restore skips it, and a crash straddling the rename can
+never publish half-flushed file contents.
 Elasticity: restore() takes the CURRENT mesh's shardings and device_puts
 each host array accordingly — a checkpoint written under a different mesh
 (or device count) reshards transparently; tests cover 1-device <-> 8-device
 round-trips.
+
+``save_async`` returns an ``AsyncSave`` handle: exceptions raised on the
+writer thread are captured and re-raised from ``join()`` — never silently
+dropped — and a second async save to the same (dir, step) while the first
+is still in flight is refused (RuntimeError) rather than letting two
+writers race on one ``step_<N>.tmp``.
+
+The policy-driven background-queue frontend over this module lives in
+train/checkpointer.py (DESIGN.md §14).
 """
 from __future__ import annotations
 
@@ -25,13 +36,41 @@ from repro.dist.fault import (
     tree_fingerprints,
 )
 
-__all__ = ["save", "save_async", "restore", "latest_step", "find_restorable"]
+__all__ = ["save", "save_async", "restore", "latest_step", "find_restorable",
+           "AsyncSave"]
 
 
 def _flatten(tree):
     leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
     names = ["/".join(str(getattr(k, "key", k)) for k in path) for path, _ in leaves]
     return names, [leaf for _, leaf in leaves], treedef
+
+
+def _fsync_path(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _write_fsync(path: str, writer) -> None:
+    """Write ``path`` via ``writer(f)`` and flush it to stable storage."""
+    with open(path, "wb") as f:
+        writer(f)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def commit_dir(tmp: str, final: str) -> None:
+    """Durably publish a fully-written ``tmp`` directory at ``final``:
+    fsync the directory entry, atomically replace, fsync the parent so the
+    rename itself survives a crash."""
+    _fsync_path(tmp)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    _fsync_path(os.path.dirname(final) or ".")
 
 
 def save(ckpt_dir: str, step: int, tree, *, extra: dict | None = None) -> str:
@@ -44,7 +83,8 @@ def save(ckpt_dir: str, step: int, tree, *, extra: dict | None = None) -> str:
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
     for i, arr in enumerate(host):
-        np.save(os.path.join(tmp, f"{i}.npy"), arr)
+        _write_fsync(os.path.join(tmp, f"{i}.npy"),
+                     lambda f, a=arr: np.save(f, a))
     fps = tree_fingerprints(dict(zip(names, host)))
     manifest = {
         "step": step,
@@ -54,28 +94,76 @@ def save(ckpt_dir: str, step: int, tree, *, extra: dict | None = None) -> str:
         "fingerprints": [fps[n] for n in names],
         "extra": extra or {},
     }
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
+    _write_fsync(os.path.join(tmp, "manifest.json"),
+                 lambda f: f.write(json.dumps(manifest).encode()))
+    commit_dir(tmp, final)
     return final
 
 
-def save_async(ckpt_dir: str, step: int, tree, *, extra=None) -> threading.Thread:
+# async saves in flight, keyed by (abs ckpt dir, step) — the guard that
+# makes two concurrent writers on one step_<N>.tmp impossible
+_inflight: set[tuple[str, int]] = set()
+_inflight_lock = threading.Lock()
+
+
+class AsyncSave:
+    """Handle for one in-flight async save.
+
+    ``join()`` waits for the writer thread and RE-RAISES any exception it
+    hit (a failed save must surface, never vanish with the thread);
+    ``path`` holds the committed directory after a successful join."""
+
+    def __init__(self, ckpt_dir: str, step: int, host_tree, extra):
+        self.step = step
+        self.path: str | None = None
+        self._error: BaseException | None = None
+        self._key = (os.path.abspath(ckpt_dir), step)
+        with _inflight_lock:
+            if self._key in _inflight:
+                raise RuntimeError(
+                    f"async save to step {step} of {ckpt_dir} already in "
+                    f"flight — join() it before saving the same step again"
+                )
+            _inflight.add(self._key)
+        self._thread = threading.Thread(
+            target=self._run, args=(ckpt_dir, step, host_tree, extra),
+            daemon=True,
+        )
+        self._thread.start()
+
+    def _run(self, ckpt_dir, step, host_tree, extra):
+        try:
+            self.path = save(ckpt_dir, step, host_tree, extra=extra)
+        except BaseException as e:  # surfaces from join()
+            self._error = e
+        finally:
+            with _inflight_lock:
+                _inflight.discard(self._key)
+
+    def join(self, timeout: float | None = None) -> str | None:
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError(f"save of step {self.step} still running")
+        if self._error is not None:
+            raise self._error
+        return self.path
+
+    def done(self) -> bool:
+        return not self._thread.is_alive()
+
+
+def save_async(ckpt_dir: str, step: int, tree, *, extra=None) -> AsyncSave:
     """Fire-and-join-later save: leaves are fetched to host synchronously
     (cheap relative to the write) and the file I/O runs on a thread so the
-    train loop's next step overlaps the disk write."""
+    train loop's next step overlaps the disk write.  The returned handle's
+    ``join()`` re-raises writer-thread exceptions; a concurrent save to the
+    same (dir, step) raises RuntimeError immediately."""
     names, leaves, _ = _flatten(tree)
     host = [np.asarray(l) for l in leaves]  # device->host before returning
     host_tree = jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(tree), host
     )
-    t = threading.Thread(
-        target=save, args=(ckpt_dir, step, host_tree), kwargs={"extra": extra}
-    )
-    t.start()
-    return t
+    return AsyncSave(ckpt_dir, step, host_tree, extra)
 
 
 def latest_step(ckpt_dir: str) -> int | None:

@@ -1,0 +1,611 @@
+"""Policy-driven async checkpointer with RRNS repair-on-restore.
+
+DESIGN.md §14.  Three layers:
+
+1. **Policy** — ``SavePolicy`` combines overlapping step intervals
+   (levanter-style ``every@until`` schedules, e.g. save often early, less
+   often late) with a wall-clock interval; ``parse_policy`` reads the
+   ``--ckpt-policy`` grammar (``"2@10,5,30s"``).
+
+2. **Checkpointer** — ONE background writer thread fed by a bounded queue:
+   ``maybe_save`` snapshots the tree to host and enqueues (blocking when
+   the queue is full, so saves can overlap training but never pile up
+   unboundedly); writer-thread exceptions are held and re-raised from the
+   next ``wait()`` / ``close()`` / ``maybe_save()``, never dropped.  Each
+   commit is write-to-``step_<N>.tmp`` + fsync + atomic rename
+   (checkpoint.commit_dir), followed by retention GC (``keep`` newest).
+
+3. **RRNS shard format** — each leaf is stored as the RRNS codeword of its
+   raw bytes: the byte buffer, padded to a multiple of 4, is read as
+   uint32 limbs ``q < 2**32``, and the wire file ``i.rns.npy`` holds
+   ``wire[c, j] = q_j mod m_c`` for the 3 base + 2 redundant channels of
+   ``GradCodec.make(world=1, correct=True)`` (int32, channel-major).
+   Since ``q < 2**32 << qmax ~ 2**44`` the signed embedding is the
+   identity and the encoding is LOSSLESS — restore decodes by CRT over
+   the base channels and checks a sha256 content fingerprint end-to-end.
+   On mismatch, ``fault.repair_packed`` locates and rebuilds the single
+   corrupted channel per element (a bit flip anywhere in the file damages
+   exactly one ``(channel, element)`` residue); multi-channel damage
+   refuses (verdict -2) and restore falls back to the next restorable
+   step.  Storage cost: 5 int32 channels per uint32 word = 5x — the price
+   of single-channel self-healing without a second replica.
+
+Crash injection for the kill-and-resume harness: set
+``REPRO_CKPT_CRASH_STEP=<n>`` (and optionally
+``REPRO_CKPT_CRASH_FILES=<k>``, default 1) and the writer SIGKILLs its own
+process after the k-th leaf file of step n is written — before the
+manifest and the atomic rename, leaving a torn ``step_<n>.tmp`` that
+discovery never sees.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+import queue
+import shutil
+import signal
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.core.base import RNSBase
+from repro.dist.fault import repair_packed, tensor_fingerprint
+from repro.dist.grad_codec import GradCodec
+from repro.train.checkpoint import _flatten, _write_fsync, commit_dir
+
+__all__ = [
+    "StepInterval", "SavePolicy", "parse_policy",
+    "CheckpointCorrupt", "ckpt_codec",
+    "write_step_dir", "read_step_dir",
+    "discover_steps", "discover_latest",
+    "inject_channel_corruption", "Checkpointer",
+]
+
+FORMAT = "rrns-v1"
+CRASH_STEP_ENV = "REPRO_CKPT_CRASH_STEP"
+CRASH_FILES_ENV = "REPRO_CKPT_CRASH_FILES"
+
+
+class CheckpointCorrupt(IOError):
+    """A step directory whose damage exceeds single-channel repair —
+    truncated/unloadable wire file, verdict -2 elements, or a content
+    fingerprint that still mismatches after repair."""
+
+
+# ---------------------------------------------------------------------------
+# save policy
+
+
+@dataclasses.dataclass(frozen=True)
+class StepInterval:
+    """Save every ``every`` steps while ``step <= until`` (None = forever)."""
+
+    every: int
+    until: int | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class SavePolicy:
+    """Overlapping step-based and time-based save schedules.
+
+    ``intervals`` are consulted in order: the FIRST whose ``until`` covers
+    the step decides the step cadence (so ``2@10,5`` = every 2 steps up to
+    step 10, every 5 after).  ``every_seconds`` fires independently of the
+    step schedule — whichever is due first wins.
+
+    >>> p = parse_policy("2@10,5,30s")
+    >>> [s for s in range(1, 21) if p.step_due(s)]
+    [2, 4, 6, 8, 10, 15, 20]
+    >>> p.every_seconds
+    30.0
+    >>> p.time_due(now=61.0, last=30.0), p.time_due(now=40.0, last=30.0)
+    (True, False)
+    """
+
+    intervals: tuple[StepInterval, ...] = ()
+    every_seconds: float | None = None
+
+    def step_due(self, step: int) -> bool:
+        if step <= 0:
+            return False
+        for iv in self.intervals:
+            if iv.until is None or step <= iv.until:
+                return step % iv.every == 0
+        return False
+
+    def time_due(self, *, now: float, last: float) -> bool:
+        return (self.every_seconds is not None
+                and now - last >= self.every_seconds)
+
+
+def parse_policy(spec) -> SavePolicy:
+    """Parse the ``--ckpt-policy`` grammar: comma-separated terms, each
+    ``N`` (every N steps), ``N@M`` (every N steps up to step M), ``Ns`` /
+    ``Nm`` (every N seconds / minutes of wall clock; at most one).
+
+    >>> parse_policy("5")
+    SavePolicy(intervals=(StepInterval(every=5, until=None),), every_seconds=None)
+    >>> parse_policy("45s").every_seconds
+    45.0
+    >>> parse_policy("2@10,5").intervals
+    (StepInterval(every=2, until=10), StepInterval(every=5, until=None))
+    >>> parse_policy("0")
+    Traceback (most recent call last):
+        ...
+    ValueError: save interval must be >= 1 step: '0'
+    """
+    if isinstance(spec, SavePolicy):
+        return spec
+    intervals: list[StepInterval] = []
+    secs = None
+    for term in str(spec).split(","):
+        term = term.strip()
+        if not term:
+            continue
+        if term[-1] in "sm" and term[:-1]:
+            if secs is not None:
+                raise ValueError(f"more than one time term in policy {spec!r}")
+            secs = float(term[:-1]) * (60.0 if term[-1] == "m" else 1.0)
+            if secs <= 0:
+                raise ValueError(f"time interval must be > 0: {term!r}")
+            continue
+        every, at, until = term.partition("@")
+        if at and not until:
+            raise ValueError(f"dangling '@' in policy term {term!r}")
+        iv = StepInterval(int(every), int(until) if until else None)
+        if iv.every < 1:
+            raise ValueError(f"save interval must be >= 1 step: {term!r}")
+        intervals.append(iv)
+    # bounded intervals first, in increasing reach, so step_due's first
+    # covering interval is the most specific one
+    intervals.sort(key=lambda iv: (iv.until is None, iv.until or 0))
+    if sum(iv.until is None for iv in intervals) > 1:
+        raise ValueError(f"more than one unbounded step term in {spec!r}")
+    return SavePolicy(tuple(intervals), secs)
+
+
+# ---------------------------------------------------------------------------
+# RRNS leaf wire format
+
+
+@functools.lru_cache(maxsize=None)
+def ckpt_codec() -> GradCodec:
+    """The checkpoint codec: world=1 RRNS (3 base + m_a + m_b channels),
+    jnp path (repair runs on whatever host/device is around)."""
+    return GradCodec.make(world=1, correct=True, fused=False)
+
+
+@functools.lru_cache(maxsize=None)
+def _codec_for(moduli: tuple, ma: int, mb: int, bits: int) -> GradCodec:
+    return GradCodec(base=RNSBase(moduli=moduli, ma=ma, bits=bits),
+                     frac_bits=16, world=1, fused=False, mb=mb)
+
+
+def codec_from_manifest(manifest: dict) -> GradCodec:
+    """Rebuild the exact codec a manifest's wire files were written under —
+    checkpoints stay readable if the default codec ever changes."""
+    c = manifest["codec"]
+    return _codec_for(tuple(c["moduli"]), c["ma"], c["mb"], c["bits"])
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # registered names like bfloat16
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _all_moduli(codec: GradCodec) -> np.ndarray:
+    return np.array(tuple(codec.base.moduli) + codec.redundant,
+                    dtype=np.int64)
+
+
+def leaf_to_wire(codec: GradCodec, arr) -> np.ndarray:
+    """Lossless RRNS codeword of one host array's raw bytes.
+
+    >>> codec = ckpt_codec()
+    >>> w = leaf_to_wire(codec, np.arange(3, dtype=np.float32))
+    >>> w.shape, w.dtype                       # 5 channels, 3 uint32 limbs
+    ((5, 3), dtype('int32'))
+    >>> a = wire_to_leaf(codec, w, "float32", (3,), 12)
+    >>> a.tolist()
+    [0.0, 1.0, 2.0]
+    """
+    a = np.ascontiguousarray(np.asarray(arr))
+    raw = a.tobytes()
+    raw += b"\x00" * ((-len(raw)) % 4)
+    limbs = np.frombuffer(raw, dtype="<u4").astype(np.int64)
+    return (limbs[None, :] % _all_moduli(codec)[:, None]).astype(np.int32)
+
+
+def wire_to_leaf(codec: GradCodec, wire: np.ndarray, dtype, shape,
+                 nbytes: int) -> np.ndarray:
+    """CRT-decode a wire codeword back to the original array (base
+    channels only — the redundant rows are for locate-and-correct)."""
+    mods = [int(m) for m in codec.base.moduli]
+    M = int(codec.base.M)
+    acc = np.zeros(wire.shape[1], dtype=np.int64)
+    for c, m in enumerate(mods):
+        Mi = M // m
+        inv = pow(Mi % m, -1, m)
+        # t < m < 2**15 and t*Mi < M ~ 2**45: three terms stay in int64
+        acc += ((wire[c].astype(np.int64) * inv) % m) * Mi
+    q = acc % M
+    raw = (q & 0xFFFFFFFF).astype("<u4").tobytes()[:nbytes]
+    return np.frombuffer(raw, dtype=_np_dtype(str(dtype))).reshape(
+        tuple(shape)).copy()
+
+
+# ---------------------------------------------------------------------------
+# step-dir IO
+
+
+def _maybe_crash(step: int, files_written: int) -> None:
+    want = os.environ.get(CRASH_STEP_ENV)
+    if want is None or int(want) != step:
+        return
+    if files_written >= int(os.environ.get(CRASH_FILES_ENV, "1")):
+        os.kill(os.getpid(), signal.SIGKILL)  # torn save, by design
+
+
+def write_step_dir(ckpt_dir: str, step: int, tree, *,
+                   extra: dict | None = None) -> str:
+    """Atomic RRNS-format save of a pytree: ``step_<N>/{manifest.json,
+    0.rns.npy, ...}`` committed by fsync + rename."""
+    names, leaves, _ = _flatten(tree)
+    # np.asarray, NOT ascontiguousarray: the latter promotes 0-d arrays to
+    # (1,), which would round-trip scalars with the wrong rank
+    host = [np.asarray(l) for l in leaves]
+    codec = ckpt_codec()
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    metas = []
+    for i, arr in enumerate(host):
+        wire = leaf_to_wire(codec, arr)
+        _write_fsync(os.path.join(tmp, f"{i}.rns.npy"),
+                     lambda f, w=wire: np.save(f, w))
+        _maybe_crash(step, i + 1)
+        metas.append({
+            "dtype": str(arr.dtype),
+            "shape": list(arr.shape),
+            "nbytes": arr.nbytes,
+            "sha": tensor_fingerprint(arr),
+        })
+    manifest = {
+        "format": FORMAT,
+        "step": step,
+        "names": names,
+        "leaves": metas,
+        "codec": {
+            "moduli": [int(m) for m in codec.base.moduli],
+            "ma": int(codec.base.ma),
+            "mb": int(codec.mb),
+            "bits": int(codec.base.bits),
+        },
+        "extra": extra or {},
+    }
+    _write_fsync(os.path.join(tmp, "manifest.json"),
+                 lambda f: f.write(json.dumps(manifest).encode()))
+    commit_dir(tmp, final)
+    return final
+
+
+def _read_manifest(path: str) -> dict:
+    mp = os.path.join(path, "manifest.json")
+    if not os.path.exists(mp):
+        raise FileNotFoundError(f"no manifest under {path} (torn save?)")
+    with open(mp) as f:
+        return json.load(f)
+
+
+def read_step_dir(path: str):
+    """Load + verify + repair one RRNS step dir.
+
+    Returns ``(manifest, {name: host array}, report)`` with ``report``
+    counting ``{"leaves", "repaired_leaves", "repaired_elements",
+    "unrecoverable"}``.  Raises FileNotFoundError for a torn save and
+    CheckpointCorrupt when any leaf is beyond single-channel repair —
+    callers fall back to the next restorable step.
+
+    Legacy ``fault.load_step`` directories (plain ``.npy`` + sha
+    fingerprints, no repair possible) are read transparently.
+    """
+    manifest = _read_manifest(path)
+    if manifest.get("format") != FORMAT:
+        from repro.dist.fault import load_step
+
+        manifest, flat = load_step(path)
+        return manifest, flat, {"leaves": len(flat), "repaired_leaves": 0,
+                                "repaired_elements": 0, "unrecoverable": 0}
+    codec = codec_from_manifest(manifest)
+    report = {"leaves": len(manifest["names"]), "repaired_leaves": 0,
+              "repaired_elements": 0, "unrecoverable": 0}
+    flat = {}
+    for i, (name, meta) in enumerate(zip(manifest["names"],
+                                         manifest["leaves"])):
+        fp = os.path.join(path, f"{i}.rns.npy")
+        if not os.path.exists(fp):
+            raise FileNotFoundError(f"{fp} missing (torn save?)")
+        try:
+            wire = np.load(fp)
+        except Exception as e:  # truncated / mangled file body
+            raise CheckpointCorrupt(f"{fp} unloadable: {e}") from e
+        n_limbs = (meta["nbytes"] + 3) // 4
+        if wire.shape != (codec.n_channels, n_limbs):
+            raise CheckpointCorrupt(
+                f"{fp} has shape {wire.shape}, expected "
+                f"{(codec.n_channels, n_limbs)} (truncated?)")
+        arr = wire_to_leaf(codec, wire, meta["dtype"], meta["shape"],
+                           meta["nbytes"])
+        if tensor_fingerprint(arr) == meta["sha"]:
+            flat[name] = arr  # fast path: clean leaf, no repair pass
+            continue
+        import jax.numpy as jnp
+
+        typed = codec.as_array(jnp.asarray(wire), channel_major=True)
+        fixed, rep = repair_packed(codec, typed, wraps=0)
+        if rep["unrecoverable"]:
+            report["unrecoverable"] += rep["unrecoverable"]
+            raise CheckpointCorrupt(
+                f"leaf {name!r} of {path}: {rep['unrecoverable']} "
+                f"element(s) with multi-channel damage — refusing "
+                f"(falling back beats miscorrecting)")
+        arr = wire_to_leaf(codec, np.asarray(fixed.residues), meta["dtype"],
+                           meta["shape"], meta["nbytes"])
+        if tensor_fingerprint(arr) != meta["sha"]:
+            raise CheckpointCorrupt(
+                f"leaf {name!r} of {path} fails its content fingerprint "
+                f"even after repair")
+        report["repaired_leaves"] += 1
+        report["repaired_elements"] += rep["repaired"]
+        flat[name] = arr
+    return manifest, flat, report
+
+
+def discover_steps(ckpt_dir: str) -> list[int]:
+    """Committed step numbers under ``ckpt_dir``, ascending (``.tmp``
+    remnants and non-checkpoint entries ignored)."""
+    if not ckpt_dir or not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            try:
+                steps.append(int(d.split("_", 1)[1]))
+            except ValueError:
+                continue
+    return sorted(steps)
+
+
+def discover_latest(ckpt_dir: str) -> int | None:
+    """Newest committed step number (committed != verified: restore still
+    walks backwards past corrupt steps)."""
+    steps = discover_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def inject_channel_corruption(path: str, *, leaf: int = 0,
+                              channels=(0,), index: int = 0,
+                              delta: int = 1) -> None:
+    """Fault injection: modular-bump residues of one wire element in a
+    committed step dir — each channel in ``channels`` moves by ``delta``
+    mod its modulus, staying a syntactically valid residue.  One channel
+    demonstrates locate-and-correct; two BASE channels (e.g. ``(0, 1)``)
+    demonstrate the multi-channel refuse path."""
+    manifest = _read_manifest(path)
+    codec = codec_from_manifest(manifest)
+    mods = _all_moduli(codec)
+    fp = os.path.join(path, f"{leaf}.rns.npy")
+    wire = np.load(fp)
+    for c in channels:
+        wire[c, index] = (int(wire[c, index]) + delta) % int(mods[c])
+    np.save(fp, wire)
+
+
+# ---------------------------------------------------------------------------
+# the Checkpointer
+
+
+class Checkpointer:
+    """Background-threaded, policy-driven, self-healing checkpoint writer.
+
+    One writer thread consumes a bounded queue of host-snapshotted trees;
+    ``maybe_save`` is the train-loop hook (cheap no-op when the policy is
+    not due).  Writer errors surface on the next ``wait()`` / ``close()``
+    / ``maybe_save()`` — a failed save can never vanish silently.  After
+    every commit, retention GC prunes to the ``keep`` newest steps.
+
+    Use as a context manager; ``close()`` drains the queue and joins the
+    thread.
+    """
+
+    def __init__(self, ckpt_dir: str, policy="10", *, keep: int | None = None,
+                 queue_size: int = 2):
+        if keep is not None and keep < 1:
+            raise ValueError("keep must be >= 1 (or None for no GC)")
+        self.dir = ckpt_dir
+        self.policy = parse_policy(policy)
+        self.keep = keep
+        os.makedirs(ckpt_dir, exist_ok=True)
+        self._sweep_tmp()
+        self._q: queue.Queue = queue.Queue(maxsize=max(1, queue_size))
+        self._error: BaseException | None = None
+        self._error_lock = threading.Lock()
+        self._last_time = time.monotonic()
+        self._closed = False
+        self._thread = threading.Thread(target=self._worker, daemon=True,
+                                        name="ckpt-writer")
+        self._thread.start()
+
+    # -- lifecycle --------------------------------------------------------
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def _sweep_tmp(self) -> None:
+        """Clear torn ``step_*.tmp`` remnants of a crashed predecessor
+        (single-writer protocol: nothing else may be writing here)."""
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+
+    def _worker(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            step, host_tree, extra = item
+            try:
+                write_step_dir(self.dir, step, host_tree, extra=extra)
+                self._gc()
+            except BaseException as e:
+                with self._error_lock:
+                    if self._error is None:  # first failure wins
+                        self._error = e
+            finally:
+                self._q.task_done()
+
+    def _check_error(self) -> None:
+        with self._error_lock:
+            err, self._error = self._error, None
+        if err is not None:
+            raise err
+
+    # -- saving -----------------------------------------------------------
+
+    def maybe_save(self, step: int, tree, *, extra: dict | None = None,
+                   force: bool = False) -> bool:
+        """Save iff the policy says ``step`` (or the wall clock) is due.
+        Returns True when a save was enqueued."""
+        self._check_error()
+        now = time.monotonic()
+        if not (force or self.policy.step_due(step)
+                or self.policy.time_due(now=now, last=self._last_time)):
+            return False
+        self._last_time = now
+        self._enqueue(step, tree, extra)
+        return True
+
+    def save(self, step: int, tree, *, extra: dict | None = None) -> None:
+        """Unconditional async save (policy bypassed)."""
+        self._check_error()
+        self._last_time = time.monotonic()
+        self._enqueue(step, tree, extra)
+
+    def _enqueue(self, step, tree, extra) -> None:
+        if self._closed:
+            raise RuntimeError("Checkpointer is closed")
+        # snapshot to host NOW: the training loop may mutate/donate these
+        # buffers the moment we return
+        names_leaves = _flatten(tree)
+        host = [np.asarray(l) for l in names_leaves[1]]
+        host_tree = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(tree), host)
+        self._q.put((step, host_tree, extra))  # blocks when queue is full
+
+    def wait(self) -> None:
+        """Block until every enqueued save has committed; re-raise the
+        first writer error if any save failed."""
+        self._q.join()
+        self._check_error()
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self._q.put(None)
+        self._thread.join()
+        self._check_error()
+
+    def _gc(self) -> None:
+        if self.keep is None:
+            return
+        for s in discover_steps(self.dir)[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # -- restore ----------------------------------------------------------
+
+    def restore(self, abstract_tree=None, shardings=None, *,
+                step: int | None = None):
+        return restore(self.dir, abstract_tree, shardings, step=step)
+
+
+def restore(ckpt_dir: str, abstract_tree=None, shardings=None, *,
+            step: int | None = None):
+    """Restore the newest repairable step (or exactly ``step``).
+
+    Walks committed steps newest-first; a torn, truncated, or
+    multi-channel-damaged step is SKIPPED (counted in the report) and the
+    walk falls back to the next one.  Single-channel damage is repaired in
+    stride via the RRNS codeword (read_step_dir).
+
+    ``abstract_tree`` (a pytree of ShapeDtypeStructs or arrays) fixes the
+    structure; None rebuilds a nested dict from the saved ``a/b/c`` leaf
+    names (dict-only trees).  ``shardings`` — a matching pytree of
+    NamedShardings — device_puts each host array onto the CURRENT mesh,
+    which is what makes restore elastic: the checkpoint stores full host
+    arrays, so a ZeRO-1 state saved under one mesh reshards onto another.
+
+    Returns ``(tree, step, extra, report)``; raises FileNotFoundError when
+    nothing under ``ckpt_dir`` is restorable.
+    """
+    candidates = ([step] if step is not None
+                  else list(reversed(discover_steps(ckpt_dir))))
+    skipped = 0
+    last_err: Exception | None = None
+    for s in candidates:
+        path = os.path.join(ckpt_dir, f"step_{s}")
+        try:
+            manifest, flat, report = read_step_dir(path)
+        except (FileNotFoundError, CheckpointCorrupt, OSError,
+                ValueError, KeyError) as e:
+            if step is not None:
+                raise
+            skipped += 1
+            last_err = e
+            continue
+        report = dict(report, steps_skipped=skipped)
+        if abstract_tree is None:
+            tree = _nest(manifest["names"], flat)
+        else:
+            names, _, _ = _flatten(abstract_tree)
+            if names != manifest["names"]:
+                raise ValueError(
+                    "checkpoint tree mismatch: "
+                    f"{set(names) ^ set(manifest['names'])}")
+            arrays = [flat[k] for k in names]
+            if shardings is not None:
+                sh = jax.tree_util.tree_leaves(
+                    shardings, is_leaf=lambda x: hasattr(x, "spec"))
+                arrays = [jax.device_put(a, s_) for a, s_ in zip(arrays, sh)]
+            tree = jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(abstract_tree), arrays)
+        return tree, manifest["step"], manifest.get("extra", {}), report
+    detail = f" (skipped {skipped}: {last_err})" if skipped else ""
+    raise FileNotFoundError(
+        f"no restorable checkpoint under {ckpt_dir}{detail}")
+
+
+def _nest(names: list[str], flat: dict) -> dict:
+    tree: dict = {}
+    for name in names:
+        parts = name.split("/")
+        d = tree
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = flat[name]
+    return tree

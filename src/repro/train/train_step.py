@@ -152,7 +152,10 @@ def make_train_step(
             loss, ce, aux = (
                 jax.lax.pmean(x, rns_axis) for x in (loss, ce, aux)
             )
-        metrics = {"loss": loss, "ce": ce, "aux": aux, "gnorm": gnorm}
+        # the optimizer's post-update step counter rides along so drivers
+        # can sanity-check a checkpoint resume against the loop's own step
+        metrics = {"loss": loss, "ce": ce, "aux": aux, "gnorm": gnorm,
+                   "opt_step": opt_state["step"]}
         if rns_codec is not None and rns_repair:
             metrics["repaired"] = repaired
             metrics["unrepairable"] = unrepairable

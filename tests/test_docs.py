@@ -25,6 +25,7 @@ DOCTEST_MODULES = (
     "repro.core.extend",
     "repro.serve.scheduler",
     "repro.serve.batcher",
+    "repro.train.checkpointer",
 )
 
 

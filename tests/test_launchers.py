@@ -45,6 +45,26 @@ def test_serve_driver_runs(tmp_path):
     assert replay["latency_ticks"] == report["latency_ticks"]
 
 
+def test_serve_driver_warm_restart(tmp_path):
+    """--warm-restart persists the paged pool's prefix pages + wire
+    fingerprints; a second identical run adopts them and dedups."""
+    from repro.launch.serve import main as serve_main
+
+    args = ["--arch", "gemma-2b", "--requests", "4", "--slots", "2",
+            "--cache-len", "64", "--prefill-chunk", "8", "--page-size", "8",
+            "--max-new", "4", "--prompt-mean", "10", "--rns-verify",
+            "--seed", "3", "--warm-restart", str(tmp_path / "warm")]
+    cold = serve_main(args)
+    assert cold["warm_restart"]["restored"] is False  # nothing saved yet
+    assert cold["warm_restart"]["pages_saved"] >= 1
+    warm = serve_main(args)
+    assert warm["warm_restart"]["restored"] is True
+    assert warm["warm_restart"]["adopted"] >= 1
+    assert warm["warm_restart"]["dropped"] == 0
+    assert warm["paging"]["dedup_hits"] >= 1  # restart-surviving prefixes
+    assert warm["rns"]["slots_failed"] == 0
+
+
 @pytest.mark.parametrize("arch", ["mamba2-370m", "internvl2-26b"])
 def test_serve_driver_single_shot_fallback(arch):
     """Gated families (ssm, vlm with its patch-prefix cache) still serve
