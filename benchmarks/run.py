@@ -18,11 +18,14 @@ additionally writes the same rows as machine-readable JSON (default
   serve_batching       continuous batching vs one-at-a-time serving
   serve_paged          paged prefix-sharing pool vs the monolithic cache
   ckpt_async           async RRNS checkpointer stall vs blocking saves
+  crypto_modexp        batched crypto lane vs solo ladders, Pallas vs jnp
 
 ``--json`` also splits the ``rns_array_*`` rows into BENCH_api.json, the
-``serve_*`` rows into BENCH_serve.json, and the ``ckpt_*`` rows into
-BENCH_ckpt.json so the typed-API overhead, the serving latency/throughput
-trajectory, and the checkpoint overlap each have their own tracked artifact.
+``serve_*`` rows into BENCH_serve.json, the ``ckpt_*`` rows into
+BENCH_ckpt.json, and the ``crypto_*`` rows into BENCH_crypto.json so the
+typed-API overhead, the serving latency/throughput trajectory, the
+checkpoint overlap, and the crypto-lane batching win each have their own
+tracked artifact.
 """
 from __future__ import annotations
 
@@ -581,6 +584,110 @@ def ckpt_async():
     emit("ckpt_async_ratio", 0, f"overlap_ratio={t_block/t_async:.3f}")
 
 
+# ----------------------------------------------------------------- crypto
+CRYPTO_REQS = 8
+CRYPTO_LIMBS = 4
+CRYPTO_EXP_BITS = 16
+
+
+def crypto_modexp():
+    """Batched RNS modexp on the serve engine (DESIGN.md §15): the crypto
+    lane with 4 slots (ladder chunks interleaved across co-resident
+    requests through ONE jitted step graph) vs a 1-slot lane that must
+    ladder requests back to back — same graphs, same workload, every
+    result checked against ``pow()``.  The committed gate metric is
+    ``throughput_ratio`` = batched/solo requests-per-second, each the
+    best of SERVE_PASSES timed passes (runner-noise-proof like the serve
+    and ckpt gates).  Also records one dual-base Montgomery product,
+    pure-jnp vs the fused Pallas kernel (interpret mode off-TPU — a
+    bitwise-identity row, not a perf row).  Rows land in
+    BENCH_crypto.json."""
+    import math
+    import random
+
+    from repro.configs import get_config
+    from repro.core import backend
+    from repro.core.array import RnsArray
+    from repro.core.montgomery import DualRep, mont_mul
+    from repro.models import init_params
+    from repro.serve.batcher import ContinuousBatcher
+    from repro.serve.crypto import CryptoContext, CryptoRequest
+
+    ctx = CryptoContext(n_limbs=CRYPTO_LIMBS, exp_bits=CRYPTO_EXP_BITS)
+    cfg = get_config("gemma-2b").smoke()
+    params = init_params(cfg, jax.random.key(0))
+    rng = random.Random(31)
+    MMp = ctx.baseB.M * ctx.baseBp.M
+
+    def modulus():
+        while True:
+            N = rng.randrange(5, ctx.n_max) | 1
+            if math.gcd(N, MMp) == 1:
+                return N
+
+    cases = [(lambda N: (rng.randrange(1, N),
+                         rng.randrange(1 << CRYPTO_EXP_BITS), N))(modulus())
+             for _ in range(CRYPTO_REQS)]
+    rid = iter(range(1, 1 << 30))  # fresh rids per pass (wire keys are held)
+
+    def run(slots):
+        eng = ContinuousBatcher(cfg, params, n_slots=1, cache_len=16,
+                                prefill_chunk=8, crypto_slots=slots,
+                                crypto_ctx=ctx, crypto_chunk=4)
+
+        def one_pass():
+            for a, e, N in cases:
+                eng.submit(CryptoRequest(rid=next(rid), op="modexp",
+                                         a=a, b=e, n=N))
+            t0 = time.perf_counter()
+            done = eng.run_to_completion()
+            wall = time.perf_counter() - t0
+            for r in done:
+                assert r.result == pow(r.a, r.b, r.n), r.rid
+            eng.drain_completed()
+            return len(done) / wall
+
+        one_pass()                  # warmup: compile admit/step/final
+        return max(one_pass() for _ in range(SERVE_PASSES))
+
+    rps_b = run(4)
+    rps_s = run(1)
+    emit("crypto_modexp_batched", 1e6 / rps_b,
+         f"req_per_s={rps_b:.2f},slots=4,exp_bits={CRYPTO_EXP_BITS}")
+    emit("crypto_modexp_solo", 1e6 / rps_s, f"req_per_s={rps_s:.2f}")
+    emit("crypto_modexp_ratio", 0,
+         f"throughput_ratio={rps_b/rps_s:.3f},reqs={CRYPTO_REQS}")
+
+    # one Montgomery product, jnp vs fused Pallas, bitwise on all channels
+    N = modulus()
+    c = ctx.consts_for(N)
+
+    def dual(vals):
+        lo = np.stack([ctx.encode_lo(v) for v in vals])
+        hi = np.stack([ctx.encode_hi(v) for v in vals])
+        return DualRep(
+            RnsArray.from_packed(ctx.baseB, jnp.asarray(lo, ctx.baseB.dtype),
+                                 mb=ctx.mb),
+            RnsArray.from_packed(ctx.baseBp, jnp.asarray(hi, ctx.baseBp.dtype)),
+        )
+
+    Bm = 256
+    x = dual([rng.randrange(2 * N) for _ in range(Bm)])
+    y = dual([rng.randrange(2 * N) for _ in range(Bm)])
+    neg, n_hi = jnp.asarray(c["neg"]), jnp.asarray(c["n_hi"])
+    with backend("jnp"):
+        f_jnp = jax.jit(lambda u, v: mont_mul(u, v, neg, n_hi).lo.to_packed())
+        t_j = _time(f_jnp, x, y, iters=5)
+    with backend("pallas"):
+        f_pal = jax.jit(lambda u, v: mont_mul(u, v, neg, n_hi).lo.to_packed())
+        t_p = _time(f_pal, x, y, iters=5)
+    bitwise = bool(jnp.all(f_jnp(x, y) == f_pal(x, y)))
+    emit("crypto_mont_mul_jnp", t_j, f"batch={Bm},limbs={CRYPTO_LIMBS}")
+    emit("crypto_mont_mul_pallas", t_p,
+         f"bitwise={bitwise},note=interpret-mode-not-perf")
+    assert bitwise, "Pallas Montgomery product diverged from the jnp path"
+
+
 # --------------------------------------------------------- division/scaling
 def division_scaling():
     base = make_base(4, bits=8)
@@ -613,13 +720,14 @@ TABLES = [
     serve_batching,
     serve_paged,
     ckpt_async,
+    crypto_modexp,
     division_scaling,
 ]
 
 
 def main(argv=None) -> None:
     global NS, KERNEL_NS, MRC_NS, BATCH, ALLREDUCE_SIZES, EXT_TRIALS, \
-        SERVE_REQS, CKPT_STEPS
+        SERVE_REQS, CKPT_STEPS, CRYPTO_REQS
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", nargs="?", const="BENCH_codec.json",
                     default=None, metavar="PATH",
@@ -634,6 +742,10 @@ def main(argv=None) -> None:
     ap.add_argument("--json-ckpt", default="BENCH_ckpt.json", metavar="PATH",
                     help="with --json: where the ckpt_* rows (async "
                          "checkpoint overlap) are additionally written")
+    ap.add_argument("--json-crypto", default="BENCH_crypto.json",
+                    metavar="PATH",
+                    help="with --json: where the crypto_* rows (batched "
+                         "modexp lane throughput) are additionally written")
     ap.add_argument("--small", action="store_true",
                     help="CI smoke sizes: trimmed sweeps, same coverage")
     args = ap.parse_args(argv)
@@ -646,6 +758,7 @@ def main(argv=None) -> None:
         EXT_TRIALS = 64
         SERVE_REQS = 4
         CKPT_STEPS = 4
+        CRYPTO_REQS = 4
     print("name,us_per_call,derived")
     for fn in TABLES:
         fn()
@@ -668,6 +781,11 @@ def main(argv=None) -> None:
         with open(args.json_ckpt, "w") as f:
             json.dump(ckpt_rows, f, indent=1, sort_keys=True)
         print(f"# wrote {len(ckpt_rows)} rows to {args.json_ckpt}")
+        crypto_rows = {k: v for k, v in RESULTS.items()
+                       if k.startswith("crypto_")}
+        with open(args.json_crypto, "w") as f:
+            json.dump(crypto_rows, f, indent=1, sort_keys=True)
+        print(f"# wrote {len(crypto_rows)} rows to {args.json_crypto}")
 
 
 if __name__ == "__main__":

@@ -41,4 +41,10 @@ from .division import (  # noqa: F401
     scale_pow2,
     parity,
 )
-from .modmul import RNSMontgomery, DualRep  # noqa: F401
+from .montgomery import (  # noqa: F401
+    RNSMontgomery,
+    DualRep,
+    mont_mul,
+    ladder_step,
+    mont_consts,
+)

@@ -8,6 +8,11 @@ context-managed setting governs all of them:
     with repro.core.backend("pallas"):
         a >= b                    # RnsArray ops route to the fused kernels
 
+Governed call sites: the ``RnsArray`` methods (compare/extend/mrc/mul),
+the codec encode/decode paths, and the dual-base Montgomery ops in
+``core.montgomery`` (``mont_mul`` / ``ladder_step`` route to the fused
+``kernels.mont_ladder`` pair the same way the codec ops route to theirs).
+
 Settings (resolution order, DESIGN.md §11):
 
 * ``"jnp"``    — always the pure-jnp reference implementations.

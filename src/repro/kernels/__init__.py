@@ -1,13 +1,17 @@
 """Pallas TPU kernels for the RNS hot spots (validated in interpret mode).
 
-Kernels: mrc (Alg. 2), modmul (ring product), rns_compare (fused Alg. 1).
-Each has a pure-jnp oracle in ref.py and a public wrapper in ops.py.
+Kernels: mrc (Alg. 2), modmul (ring product), rns_compare (fused Alg. 1),
+mont_ladder (dual-base Montgomery product + fused ladder bit).
+Each has a pure-jnp oracle (ref.py or core/montgomery.py) and a public
+wrapper in ops.py.
 """
 from .ops import (  # noqa: F401
     codec_decode_op,
     codec_encode_op,
     compare_op,
     modmul_op,
+    mont_ladder_op,
+    mont_mul_op,
     mrc_op,
 )
 from .ref import ref_mrc, ref_modmul, ref_compare, ref_to_ma  # noqa: F401

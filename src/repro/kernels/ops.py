@@ -19,6 +19,8 @@ modulus — redundant channels included) and returns an ``RnsArray``.
 """
 from __future__ import annotations
 
+import functools
+
 import jax.numpy as jnp
 import numpy as np
 
@@ -27,11 +29,12 @@ from repro.core.base import RNSBase
 from repro.core.dispatch import interpret_default as _interpret_default
 
 from .modmul import modmul_kernel_call
+from .mont_ladder import mont_ladder_kernel_call, mont_mul_kernel_call
 from .mrc import mrc_kernel_call
 from .rns_compare import compare_kernel_call
 
 __all__ = ["mrc_op", "modmul_op", "compare_op", "codec_encode_op",
-           "codec_decode_op"]
+           "codec_decode_op", "mont_mul_op", "mont_ladder_op"]
 
 
 def _flatten_batch(x):
@@ -250,3 +253,107 @@ def codec_encode_op(codec, g, *, block_b: int | None = None,
     if channel_major:
         return out[:, :B]
     return out[:, :B].T.reshape(*lead, len(m_all))
+
+
+# ------------------------------------------------- Montgomery (dual-base)
+
+
+@functools.lru_cache(maxsize=None)
+def _mont_tables_np(baseB: RNSBase, baseBp: RNSBase,
+                    lo_targets: tuple[int, ...]):
+    """Host tables for the dual-base Montgomery kernels, cached per base
+    pair + B-side channel layout (N-independent)."""
+    from repro.core.montgomery import minv_residues
+
+    for b in (baseB, baseBp):
+        if b.bits > 15:
+            raise ValueError("Pallas kernels require bits<=15 (int32 "
+                             "lanes); use repro.core for wider bases")
+    hi_t = tuple(int(m) for m in baseBp.moduli)
+    return (
+        np.asarray(baseB.inv_tri_np.T, np.int32),             # (n, n)
+        np.asarray(lo_targets, np.int32)[:, None],            # (nch_lo, 1)
+        np.asarray(baseB.betas_for(hi_t), np.int32),          # (n', n)
+        np.asarray(baseBp.inv_tri_np.T, np.int32),            # (n', n')
+        np.asarray(hi_t, np.int32)[:, None],                  # (n', 1)
+        np.asarray(baseBp.betas_for(lo_targets), np.int32),   # (nch_lo, n')
+        np.asarray(minv_residues(baseB, hi_t), np.int32)[:, None],
+    )
+
+
+def _mont_prep(d, lead, block_b):
+    """DualRep -> padded channel-major (nch_lo, B) / (n_hi, B) tiles."""
+    lo = jnp.broadcast_to(d.lo._cl().astype(jnp.int32),
+                          (*lead, d.lo.n_channels))
+    hi = jnp.broadcast_to(d.hi._cl().astype(jnp.int32),
+                          (*lead, d.hi.base.n))
+    lo_t, B = _pad_to(lo.reshape(-1, lo.shape[-1]).T, block_b, axis=1)
+    hi_t, _ = _pad_to(hi.reshape(-1, hi.shape[-1]).T, block_b, axis=1)
+    return lo_t, hi_t, B
+
+
+def _mont_consts_prep(x, neg, n_hi, lead, block_b):
+    neg = jnp.broadcast_to(jnp.asarray(neg, jnp.int32),
+                           (*lead, x.lo.base.n))
+    nhi = jnp.broadcast_to(jnp.asarray(n_hi, jnp.int32),
+                           (*lead, x.hi.base.n))
+    neg_t, _ = _pad_to(neg.reshape(-1, neg.shape[-1]).T, block_b, axis=1)
+    nhi_t, _ = _pad_to(nhi.reshape(-1, nhi.shape[-1]).T, block_b, axis=1)
+    return neg_t, nhi_t
+
+
+def _mont_wrap(x, out_lo, out_hi, B, lead):
+    from repro.core.montgomery import DualRep
+
+    lo = out_lo[:, :B].T.reshape(*lead, -1).astype(x.lo.dtype)
+    hi = out_hi[:, :B].T.reshape(*lead, -1).astype(x.hi.dtype)
+    return DualRep(x.lo._wrap(lo, signed=False),
+                   x.hi._wrap(hi, signed=False))
+
+
+def mont_mul_op(x, y, neg, n_hi, *, block_b: int = 256,
+                interpret: bool | None = None):
+    """Batched Montgomery product MM(X, Y) via the fused Pallas kernel.
+
+    ``x``/``y`` are ``DualRep`` operands (core/montgomery.py); ``neg`` /
+    ``n_hi`` are the per-``N`` channel rows from ``mont_consts`` — arrays,
+    not constants, broadcast against the batch.  Bitwise-identical to the
+    pure-jnp ``_mont_mul_jnp`` reference.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    lo_targets = tuple(int(m) for m in x.lo.channel_moduli)
+    tables = [jnp.asarray(t) for t in
+              _mont_tables_np(x.lo.base, x.hi.base, lo_targets)]
+    lead = jnp.broadcast_shapes(x.lo.shape, y.lo.shape,
+                                jnp.shape(neg)[:-1], jnp.shape(n_hi)[:-1])
+    xlo, xhi, B = _mont_prep(x, lead, block_b)
+    ylo, yhi, _ = _mont_prep(y, lead, block_b)
+    neg_t, nhi_t = _mont_consts_prep(x, neg, n_hi, lead, block_b)
+    block_b = min(block_b, xlo.shape[1])
+    out_lo, out_hi = mont_mul_kernel_call(
+        xlo, xhi, ylo, yhi, neg_t, nhi_t, *tables,
+        block_b=block_b, interpret=interpret)
+    return _mont_wrap(x, out_lo, out_hi, B, lead)
+
+
+def mont_ladder_op(r0, r1, bit, neg, n_hi, *, block_b: int = 256,
+                   interpret: bool | None = None):
+    """One fused Montgomery-ladder bit: two products + branchless select
+    in a single kernel launch.  Returns the updated ``(r0, r1)`` pair."""
+    interpret = _interpret_default() if interpret is None else interpret
+    lo_targets = tuple(int(m) for m in r0.lo.channel_moduli)
+    tables = [jnp.asarray(t) for t in
+              _mont_tables_np(r0.lo.base, r0.hi.base, lo_targets)]
+    lead = jnp.broadcast_shapes(r0.lo.shape, r1.lo.shape, jnp.shape(bit),
+                                jnp.shape(neg)[:-1], jnp.shape(n_hi)[:-1])
+    r0lo, r0hi, B = _mont_prep(r0, lead, block_b)
+    r1lo, r1hi, _ = _mont_prep(r1, lead, block_b)
+    neg_t, nhi_t = _mont_consts_prep(r0, neg, n_hi, lead, block_b)
+    bit_b = jnp.broadcast_to(jnp.asarray(bit, jnp.int32), lead)
+    bit_t, _ = _pad_to(bit_b.reshape(1, -1), block_b, axis=1)
+    block_b = min(block_b, r0lo.shape[1])
+    o0lo, o0hi, o1lo, o1hi = mont_ladder_kernel_call(
+        r0lo, r0hi, r1lo, r1hi, bit_t, neg_t, nhi_t, *tables,
+        block_b=block_b, interpret=interpret)
+    return (_mont_wrap(r0, o0lo, o0hi, B, lead),
+            _mont_wrap(r0, o1lo, o1hi, B, lead))

@@ -13,10 +13,17 @@ wall-clock throughput is reported separately.
 Workload file format (JSON lines, one request per line)::
 
     {"rid": 0, "prompt": [3, 1, 4], "max_new": 16, "eos": 7, "arrival": 0.0}
+    {"rid": 1, "family": "crypto", "op": "modexp",
+     "a": "0x1234", "b": 65537, "n": "0x10001", "arrival": 2.0}
 
 ``prompt`` may be replaced by ``"prompt_len": N`` to synthesize N random
-token ids from ``--seed``.  ``--save-trace`` writes the (possibly
-synthetic) workload back out in this format so a run is replayable.
+token ids from ``--seed``.  Crypto-family lines (DESIGN.md §15) carry big
+integers as JSON ints or hex strings (anything ``int(s, 0)`` accepts) and
+need ``--crypto-slots`` to be accepted by the engine; rids are checked for
+uniqueness ACROSS families (the engine keys verify state on rid in one
+shared log).  ``--families llm,crypto`` filters a replay to a subset.
+``--save-trace`` writes the (possibly synthetic) workload back out in this
+format (big ints as hex) so a run is replayable.
 
 Smoke flags: ``--smoke`` (the DEFAULT: shrink the arch to the CPU-sized
 config) and ``--no-smoke`` (run the full published config) are an explicit
@@ -55,11 +62,25 @@ import repro  # noqa: F401
 from repro.configs import get_config
 from repro.models import init_params
 from repro.serve.batcher import ContinuousBatcher
+from repro.serve.crypto import CryptoRequest
 from repro.serve.scheduler import Request
+
+FAMILIES = ("llm", "crypto")
+
+
+def _bigint(v) -> int:
+    """JSON big ints arrive as ints or as strings ("0x..", "0o..", "123")
+    — ``int(s, 0)`` accepts all of them; floats are refused (lossy)."""
+    if isinstance(v, bool) or isinstance(v, float):
+        raise ValueError(f"big-int field must be an int or string, "
+                         f"got {v!r}")
+    return int(v, 0) if isinstance(v, str) else int(v)
 
 
 def load_trace(path: str, rng, vocab: int) -> list:
-    """Parse a JSONL workload file into Requests (see module docstring)."""
+    """Parse a JSONL workload file into Request/CryptoRequest objects
+    (see module docstring).  Rid uniqueness is enforced ACROSS families:
+    the engine's verify log is one rid-keyed dict shared by both lanes."""
     reqs = []
     with open(path) as f:
         for i, line in enumerate(f):
@@ -67,6 +88,19 @@ def load_trace(path: str, rng, vocab: int) -> list:
             if not line:
                 continue
             d = json.loads(line)
+            family = d.get("family", "llm")
+            if family == "crypto":
+                reqs.append(CryptoRequest(
+                    rid=int(d.get("rid", i)), op=str(d["op"]),
+                    a=_bigint(d["a"]), b=_bigint(d["b"]),
+                    n=_bigint(d["n"]) if d.get("n") is not None else None,
+                    arrival=float(d.get("arrival", 0.0)),
+                ))
+                continue
+            if family != "llm":
+                raise ValueError(
+                    f"workload file {path} line {i + 1}: unknown family "
+                    f"{family!r}; expected one of {FAMILIES}")
             prompt = d.get("prompt")
             if prompt is None:
                 plen = int(d["prompt_len"])
@@ -81,8 +115,10 @@ def load_trace(path: str, rng, vocab: int) -> list:
     counts = Counter(r.rid for r in reqs)
     dups = sorted(r for r, n in counts.items() if n > 1)
     if dups:
-        # the engine keys per-request verify state on rid
-        raise ValueError(f"workload file {path}: duplicate rids {dups}")
+        # the engine keys per-request verify state on rid, shared across
+        # families — a crypto and an LLM request may NOT share a rid
+        raise ValueError(f"workload file {path}: duplicate rids {dups} "
+                         f"(rids are unique across families)")
     return reqs
 
 
@@ -104,13 +140,57 @@ def synth_requests(n: int, rng, vocab: int, *, prompt_mean: int,
     return reqs
 
 
+def synth_crypto_requests(n: int, rng, ctx, *, arrival_rate: float,
+                          rid0: int) -> list:
+    """Synthetic crypto workload over ``ctx``'s bases: modexp / modmul /
+    divmod round-robin, operands drawn uniformly below the relevant bound
+    (random odd moduli coprime to both base products — no special forms),
+    Poisson arrivals like ``synth_requests``."""
+    MMp = ctx.baseB.M * ctx.baseBp.M
+
+    def below(lim: int) -> int:
+        # rng.integers tops out at int64; big ints come from raw bytes
+        nb = (int(lim).bit_length() + 7) // 8 + 1
+        while True:
+            v = int.from_bytes(rng.bytes(nb), "little")
+            if v < lim:
+                return v
+
+    def modulus() -> int:
+        while True:
+            N = below(ctx.n_max) | 1
+            if N > 4 and math.gcd(N, MMp) == 1:
+                return N
+
+    t, reqs = 0.0, []
+    for i in range(n):
+        if arrival_rate > 0:
+            t += float(rng.exponential(1.0 / arrival_rate))
+        op = ("modexp", "modmul", "divmod")[i % 3]
+        if op == "divmod":
+            a, b, N = below(ctx.baseB.M), 1 + below(ctx.baseB.M - 1), None
+        else:
+            N = modulus()
+            a = below(N)
+            b = below(1 << ctx.exp_bits) if op == "modexp" else below(N)
+        reqs.append(CryptoRequest(rid=rid0 + i, op=op, a=a, b=b, n=N,
+                                  arrival=t))
+    return reqs
+
+
 def save_trace(path: str, reqs: list) -> None:
     with open(path, "w") as f:
         for r in reqs:
-            f.write(json.dumps({
-                "rid": r.rid, "prompt": r.prompt, "max_new": r.max_new,
-                "eos": r.eos, "arrival": r.arrival,
-            }) + "\n")
+            if getattr(r, "family", "llm") == "crypto":
+                d = {"rid": r.rid, "family": "crypto", "op": r.op,
+                     "a": hex(r.a), "b": hex(r.b), "arrival": r.arrival}
+                if r.n is not None:
+                    d["n"] = hex(r.n)
+            else:
+                d = {"rid": r.rid, "prompt": r.prompt,
+                     "max_new": r.max_new, "eos": r.eos,
+                     "arrival": r.arrival}
+            f.write(json.dumps(d) + "\n")
 
 
 def _stats(xs: list) -> dict:
@@ -184,14 +264,16 @@ def simulate(engine: ContinuousBatcher, reqs: list) -> dict:
     tick-clock counters (requests stamp their own t_* fields)."""
     reqs = sorted(reqs, key=lambda r: r.arrival)
     t, i, steps, max_conc = 0.0, 0, 0, 0
-    while i < len(reqs) or engine.sched.busy:
+    while i < len(reqs) or engine.busy:
         while i < len(reqs) and reqs[i].arrival <= t:
             engine.submit(reqs[i])
             i += 1
         engine.try_admit(now=t)
         decoding = engine.sched.decoding_slots()
-        if decoding:
-            max_conc = max(max_conc, len(decoding))
+        laddering = (engine.crypto.running_slots()
+                     if engine.crypto is not None else [])
+        if decoding or laddering:
+            max_conc = max(max_conc, len(decoding) + len(laddering))
             engine.step(now=t)
             t += 1.0
             steps += 1
@@ -231,6 +313,22 @@ def main(argv=None) -> dict:
                     help="synthetic workload size (ignored with --trace)")
     ap.add_argument("--trace", default=None, metavar="FILE",
                     help="replay a JSONL workload file instead")
+    ap.add_argument("--families", default=None, metavar="F1,F2",
+                    help="replay filter: keep only these request families "
+                         f"(subset of {','.join(FAMILIES)})")
+    ap.add_argument("--crypto-slots", type=int, default=0,
+                    help="slots of the big-integer crypto lane "
+                         "(DESIGN.md §15); 0 disables the family")
+    ap.add_argument("--crypto-requests", type=int, default=0,
+                    help="synthetic crypto requests appended to the "
+                         "workload (needs --crypto-slots; ignored with "
+                         "--trace)")
+    ap.add_argument("--crypto-limbs", type=int, default=8,
+                    help="15-bit channels per Montgomery base")
+    ap.add_argument("--crypto-exp-bits", type=int, default=32,
+                    help="fixed ladder width (max exponent bits)")
+    ap.add_argument("--crypto-chunk", type=int, default=8,
+                    help="ladder bits per engine tick (divides exp bits)")
     ap.add_argument("--arrival-rate", type=float, default=0.25,
                     help="Poisson arrivals per decode-step tick (synthetic)")
     ap.add_argument("--prompt-mean", type=int, default=16)
@@ -264,6 +362,12 @@ def main(argv=None) -> dict:
     cfg.validate()
     rng = np.random.default_rng(args.seed)
     params = init_params(cfg, jax.random.key(args.seed))
+    crypto_ctx = None
+    if args.crypto_slots:
+        from repro.serve.crypto import CryptoContext
+
+        crypto_ctx = CryptoContext(n_limbs=args.crypto_limbs,
+                                   exp_bits=args.crypto_exp_bits)
     if args.trace:
         reqs = load_trace(args.trace, rng, cfg.vocab)
     else:
@@ -271,8 +375,31 @@ def main(argv=None) -> dict:
             args.requests, rng, cfg.vocab, prompt_mean=args.prompt_mean,
             max_new=args.max_new, arrival_rate=args.arrival_rate,
         )
+        if args.crypto_requests:
+            if crypto_ctx is None:
+                ap.error("--crypto-requests needs --crypto-slots >= 1")
+            rid0 = 1 + max((r.rid for r in reqs), default=-1)
+            reqs += synth_crypto_requests(
+                args.crypto_requests, rng, crypto_ctx,
+                arrival_rate=args.arrival_rate, rid0=rid0,
+            )
+    if args.families is not None:
+        keep = {f.strip() for f in args.families.split(",") if f.strip()}
+        unknown = keep - set(FAMILIES)
+        if unknown or not keep:
+            ap.error(f"--families takes a non-empty subset of "
+                     f"{','.join(FAMILIES)}; got {args.families!r}")
+        reqs = [r for r in reqs if getattr(r, "family", "llm") in keep]
+        if not reqs:
+            ap.error(f"--families {args.families} filtered out every "
+                     f"request in the workload")
     if args.save_trace:
         save_trace(args.save_trace, reqs)
+    if any(getattr(r, "family", "llm") == "crypto" for r in reqs) \
+            and crypto_ctx is None:
+        ap.error("the workload holds crypto-family requests; pass "
+                 "--crypto-slots >= 1 to arm the crypto lane (or filter "
+                 "them out with --families llm)")
 
     try:
         engine = ContinuousBatcher(
@@ -280,10 +407,14 @@ def main(argv=None) -> dict:
             prefill_chunk=args.prefill_chunk, rns_verify=args.rns_verify,
             page_size=args.page_size, n_pages=args.pages,
             prefix_share=args.prefix_share,
+            crypto_slots=args.crypto_slots, crypto_ctx=crypto_ctx,
+            crypto_chunk=args.crypto_chunk,
         )
     except NotImplementedError as err:
         if args.rns_verify:
             raise  # the integrity path needs the slot engine
+        if crypto_ctx is not None:
+            raise  # so does the crypto lane (no single-shot crypto path)
         print(f"# {cfg.name}: {err}")
         print("# falling back to single-shot sequential serving")
         engine = None
@@ -301,9 +432,12 @@ def main(argv=None) -> dict:
             print(f"# warm restart: no state under {args.warm_restart} "
                   f"yet (cold start)")
     t0 = time.time()
+    crypto_done = []
     if engine is not None:
         counters = simulate(engine, reqs)
         done = engine.sched.completed
+        if engine.crypto is not None:
+            crypto_done = engine.crypto.completed
     else:
         done, counters = simulate_single_shot(cfg, params, reqs, rng)
     wall = time.time() - t0
@@ -314,7 +448,7 @@ def main(argv=None) -> dict:
         "engine": "continuous" if engine is not None else "single-shot",
         "n_slots": args.slots if engine is not None else 1,
         "cache_len": args.cache_len,
-        "requests": len(done),
+        "requests": len(done) + len(crypto_done),
         "tokens_out": toks,
         "steps": counters["steps"],
         "max_concurrency": counters["max_concurrency"],
@@ -327,12 +461,35 @@ def main(argv=None) -> dict:
         report["jit_traces"] = engine.jit_cache_sizes()
         if engine.paged:
             report["paging"] = engine.page_stats()
+    if crypto_done:
+        # every crypto result is differentially checkable against Python's
+        # big ints — the report performs the oracle check inline
+        ok = 0
+        for r in crypto_done:
+            want = (divmod(r.a, r.b) if r.op == "divmod"
+                    else pow(r.a % r.n, r.b, r.n) if r.op == "modexp"
+                    else (r.a * r.b) % r.n)
+            ok += int(r.result == want)
+        report["crypto"] = {
+            "requests": len(crypto_done),
+            "ops": dict(Counter(r.op for r in crypto_done)),
+            "range_bits": engine.crypto_ctx.baseB.M.bit_length(),
+            "exp_bits": engine.crypto_ctx.exp_bits,
+            "oracle_ok": ok,
+            "oracle_failed": len(crypto_done) - ok,
+            "latency_ticks": _stats(
+                [r.t_done - r.arrival for r in crypto_done]),
+        }
     if args.rns_verify:
         # wire keys: rids on the monolithic path (one per retired request,
         # still stored), page ids on the paged path (only RETAINED shared
-        # pages outlive their readers — freed pages verified at release)
-        keys = (sorted(engine.wire.keys()) if engine.paged
+        # pages outlive their readers — freed pages verified at release);
+        # crypto modexps add ("crypto", rid) keys (one-shots publish none)
+        keys = (sorted(k for k in engine.wire.keys()
+                       if not isinstance(k, tuple)) if engine.paged
                 else [r.rid for r in done])
+        keys = keys + [("crypto", r.rid) for r in crypto_done
+                       if ("crypto", r.rid) in engine.wire]
         rns = {
             "slots_verified": sum(engine.verify_log.values()),
             "slots_failed": sum(not v for v in engine.verify_log.values()),

@@ -4,3 +4,4 @@ DESIGN.md §12)."""
 from .serve_step import make_prefill, make_decode_step, cache_abstract  # noqa: F401
 from .scheduler import Request, Slot, SlotScheduler  # noqa: F401
 from .batcher import ContinuousBatcher  # noqa: F401
+from .crypto import CryptoContext, CryptoRequest  # noqa: F401

@@ -119,12 +119,24 @@ class ContinuousBatcher:
         smaller pool oversubscribes slots against pages.
     prefix_share : admission-time prompt-prefix dedup via the content
         registry (paged mode only); disable to measure pure paging.
+    crypto_slots : slots of the big-integer crypto lane (DESIGN.md §15);
+        0 (default) disables the second request family entirely.  With
+        crypto armed, ``submit`` dispatches on the request's ``family``
+        tag: ``serve.crypto.CryptoRequest`` rides the crypto lane,
+        ``Request`` the LLM lane, and both share the tick clock, the
+        verify log, and (under ``rns_verify``) the wire store.
+    crypto_ctx : optional ``serve.crypto.CryptoContext``; defaults to a
+        fresh context (8 limbs per base, 32-bit exponents).
+    crypto_chunk : Montgomery-ladder bits advanced per engine tick; must
+        divide the context's ``exp_bits``.
     """
 
     def __init__(self, cfg, params, *, n_slots: int, cache_len: int,
                  prefill_chunk: int = 32, rns_verify: bool = False,
                  mesh=None, page_size: int | None = None,
-                 n_pages: int | None = None, prefix_share: bool = True):
+                 n_pages: int | None = None, prefix_share: bool = True,
+                 crypto_slots: int = 0, crypto_ctx=None,
+                 crypto_chunk: int = 8):
         cfg.validate()
         if cfg.family not in _SUPPORTED:
             raise NotImplementedError(
@@ -274,6 +286,35 @@ class ContinuousBatcher:
             self._page_pub: dict[int, object] = {}
             self.verify_log: dict[int, bool] = {}
 
+        # Crypto lane (DESIGN.md §15): a second request family on the same
+        # engine.  Its jitted graphs follow the exact no-retrace contract
+        # of the LLM graphs above — fixed shapes, slot ids and cursors as
+        # data — and its per-slot fingerprints share the LLM wire store
+        # under ("crypto", rid) keys.
+        self.crypto = None
+        if crypto_slots:
+            from repro.serve.crypto import (
+                CryptoContext, CryptoLane, make_crypto_fns,
+            )
+            from repro.serve.serve_step import crypto_state_abstract
+
+            self.crypto_ctx = (
+                crypto_ctx if crypto_ctx is not None else CryptoContext()
+            )
+            self.crypto = CryptoLane(
+                int(crypto_slots), self.crypto_ctx.exp_bits,
+                int(crypto_chunk),
+            )
+            self.crypto_state = _zero_cache(
+                crypto_state_abstract(self.crypto_ctx, int(crypto_slots))
+            )
+            self._crypto_fns = make_crypto_fns(
+                self.crypto_ctx, int(crypto_chunk)
+            )
+        elif crypto_ctx is not None:
+            raise ValueError("crypto_ctx= given but crypto_slots=0; pass "
+                             "crypto_slots>=1 to enable the crypto lane")
+
     @property
     def _wire(self) -> dict:
         """Raw key -> RnsArray mapping of the wire store (rid-keyed on the
@@ -391,27 +432,55 @@ class ContinuousBatcher:
                 )
 
     # ------------------------------------------------------ admission path
-    def submit(self, req: Request) -> None:
-        if self.rns_verify:
-            held = (
-                req.rid in self.verify_log
-                or any(q.rid == req.rid for q in self.sched.queue)
-                or any(s.req is not None and s.req.rid == req.rid
-                       for s in self.sched.slots)
+    def _rid_held(self, rid) -> bool:
+        """Is ``rid``'s verify state still live in EITHER family?  The
+        verify log is one rid-keyed dict shared across families, so a
+        collision in either lane corrupts attribution for both."""
+        held = (
+            rid in self.verify_log
+            or any(q.rid == rid for q in self.sched.queue)
+            or any(s.req is not None and s.req.rid == rid
+                   for s in self.sched.slots)
+        )
+        if not self.paged:
+            # monolithic wires are rid-keyed, so the store itself
+            # tracks in-flight and retired-undrained rids
+            held = held or rid in self.wire
+        if self.crypto is not None:
+            held = held or (
+                any(q.rid == rid for q in self.crypto.queue)
+                or any(s.req is not None and s.req.rid == rid
+                       for s in self.crypto.slots)
+                or ("crypto", rid) in self.wire
             )
-            if not self.paged:
-                # monolithic wires are rid-keyed, so the store itself
-                # tracks in-flight and retired-undrained rids
-                held = held or req.rid in self.wire
-            if held:
-                # verify state is keyed on rid; refuse the collision
-                # before any slot is bound or device work runs
+        return held
+
+    def submit(self, req) -> None:
+        """Queue one request; dispatches on ``req.family`` ("llm" default
+        / "crypto" when the crypto lane is armed)."""
+        family = getattr(req, "family", "llm")
+        if family == "crypto":
+            if self.crypto is None:
                 raise ValueError(
-                    f"rid {req.rid} already holds verify state (queued, in "
-                    f"flight, or retired-undrained); use unique rids, or "
-                    f"drain_completed() between reuses"
+                    "engine built without crypto_slots=; pass "
+                    "crypto_slots>=1 to accept crypto-family requests"
                 )
-        self.sched.submit(req)
+            self.crypto_ctx.validate(req)
+        elif family != "llm":
+            raise ValueError(f"unknown request family {family!r}; "
+                             f"expected 'llm' or 'crypto'")
+        if self.rns_verify and self._rid_held(req.rid):
+            # verify state is keyed on rid; refuse the collision
+            # before any slot is bound or device work runs
+            raise ValueError(
+                f"rid {req.rid} already holds verify state (queued, in "
+                f"flight, or retired-undrained); use unique rids, or "
+                f"drain_completed() between reuses"
+            )
+        if family == "crypto":
+            self.crypto.queue.append(req)
+        else:
+            self.sched.submit(req)
 
     def try_admit(self, now: float = 0.0) -> list[Slot]:
         """Admit as many queued requests as there are FREE slots; each
@@ -423,9 +492,12 @@ class ContinuousBatcher:
         while True:
             slot = self.sched.admit_next(now)
             if slot is None:
-                return admitted
+                break
             self._prefill_into(slot, now)
             admitted.append(slot)
+        if self.crypto is not None:
+            self._crypto_admit(now)
+        return admitted
 
     def _prefill_into(self, slot: Slot, now: float) -> None:
         if self.paged:
@@ -526,13 +598,129 @@ class ContinuousBatcher:
                 self._page_span.pop(pid, None)
                 self._page_pub.pop(pid, None)
 
+    # --------------------------------------------------------- crypto lane
+    def _crypto_row(self, v):
+        return jnp.asarray(np.asarray(v))[None, :]
+
+    def _crypto_admit(self, now: float) -> None:
+        """Drain the crypto queue: one-shots (modmul/divmod) execute and
+        retire inside this call; modexp binds a FREE lane slot and writes
+        its ladder state (publishing the slot fingerprint when
+        ``rns_verify`` is armed).  Stops when a modexp finds no free slot
+        — FIFO order is preserved within the family."""
+        lane, ctx = self.crypto, self.crypto_ctx
+        while lane.queue:
+            req = lane.queue[0]
+            if req.op == "modexp":
+                slot = lane.free_slot()
+                if slot is None:
+                    return
+                lane.queue.popleft()
+                self._crypto_bind(slot, req, now)
+            else:
+                lane.queue.popleft()
+                req.t_admit = now
+                req.result = (self._crypto_divmod(req)
+                              if req.op == "divmod"
+                              else self._crypto_modmul(req))
+                req.t_done = now
+                lane.completed.append(req)
+                if self.rns_verify:
+                    # one-shots hold no resident device state to corrupt;
+                    # log them verified so rid accounting stays uniform
+                    self.verify_log[req.rid] = True
+
+    def _crypto_bind(self, slot, req, now: float) -> None:
+        ctx, row = self.crypto_ctx, self._crypto_row
+        from repro.serve.crypto import encode_exponent
+
+        c = ctx.consts_for(req.n)
+        a = req.a % req.n
+        self.crypto_state = self._crypto_fns["admit"](
+            self.crypto_state, jnp.int32(slot.index),
+            row(ctx.encode_lo(a)), row(ctx.encode_hi(a)),
+            row(c["m2_lo"]), row(c["m2_hi"]),
+            row(c["one_lo"]), row(c["one_hi"]),
+            row(c["neg"]), row(c["n_lo"]), row(c["n_hi"]),
+            row(encode_exponent(ctx, req.b)),
+        )
+        self.crypto.bind(slot, req, now)
+        if self.rns_verify:
+            fp = self._crypto_fns["fp"](
+                self.crypto_state, jnp.int32(slot.index)
+            )
+            self.wire.put(("crypto", req.rid), self.codec.encode_array(
+                fp, channel_major=True
+            ))
+
+    def _crypto_modmul(self, req) -> int:
+        ctx, row = self.crypto_ctx, self._crypto_row
+        c = ctx.consts_for(req.n)
+        a, b = req.a % req.n, req.b % req.n
+        out = self._crypto_fns["modmul"](
+            row(ctx.encode_lo(a)), row(ctx.encode_hi(a)),
+            row(ctx.encode_lo(b)), row(ctx.encode_hi(b)),
+            row(c["m2_lo"]), row(c["m2_hi"]),
+            row(c["neg"]), row(c["n_hi"]), row(c["n_lo"]),
+        )
+        return ctx.decode_lo(np.asarray(out)[0])
+
+    def _crypto_divmod(self, req) -> tuple:
+        ctx, row = self.crypto_ctx, self._crypto_row
+        # Alg.-1 packed layout: base channels + m_a (RRNS contexts just
+        # drop their extra m_b channel here — divmod runs on (n+1) rows)
+        xp = row(ctx.encode_lo(req.a)[: ctx.n + 1])
+        dp = row(ctx.encode_lo(req.b)[: ctx.n + 1])
+        q, r = self._crypto_fns["divmod"](xp, dp)
+        return (ctx.decode_lo(np.asarray(q)[0]),
+                ctx.decode_lo(np.asarray(r)[0]))
+
+    def _crypto_step(self, now: float) -> list:
+        """Advance every RUN lane slot ``crypto_chunk`` ladder bits and
+        retire the slots whose cursor reaches ``exp_bits``."""
+        lane = self.crypto
+        running = lane.running_slots()
+        if not running:
+            return []
+        cursors = jnp.asarray([s.cursor for s in lane.slots], jnp.int32)
+        active = jnp.asarray(
+            [1 if s.state == "RUN" else 0 for s in lane.slots], jnp.int32
+        )
+        self.crypto_state = self._crypto_fns["step"](
+            self.crypto_state, cursors, active
+        )
+        retired = []
+        for slot in running:
+            slot.cursor += lane.chunk
+            if slot.cursor >= lane.exp_bits:
+                retired.append(self._crypto_retire(slot, now))
+        return retired
+
+    def _crypto_retire(self, slot, now: float):
+        """Exit the Montgomery domain, decode the canonical result to a
+        Python int, and verify the slot fingerprint against the wire
+        codeword published at admission."""
+        req = slot.req
+        out = self._crypto_fns["final"](
+            self.crypto_state, jnp.int32(slot.index)
+        )
+        req.result = self.crypto_ctx.decode_lo(np.asarray(out)[0])
+        if self.rns_verify:
+            self.verify_log[req.rid] = self.verify_request(req)
+        return self.crypto.retire(slot, now)
+
     # --------------------------------------------------------- decode loop
     def step(self, now: float = 0.0) -> list[Request]:
-        """One persistent batched decode step over every DECODE slot;
-        returns the requests that retired this step."""
+        """One persistent batched decode step over every DECODE slot,
+        plus one ``crypto_chunk``-bit ladder advance of the crypto lane
+        when it is armed; returns the requests (both families) that
+        retired this step."""
+        crypto_retired = (
+            self._crypto_step(now) if self.crypto is not None else []
+        )
         decoding = self.sched.decoding_slots()
         if not decoding:
-            return []
+            return crypto_retired
         if self.paged:
             # write barrier for this step's one-token writes: page-boundary
             # crossings allocate, divergence into a shared page CoWs —
@@ -562,19 +750,30 @@ class ContinuousBatcher:
                     self._retire_paged(req)
                 elif self.rns_verify:
                     self.verify_log[req.rid] = self.verify_request(req)
-        return retired
+        return retired + crypto_retired
+
+    @property
+    def busy(self) -> bool:
+        """Work anywhere in the engine: LLM queue/slots or crypto lane."""
+        return self.sched.busy or (
+            self.crypto is not None and self.crypto.busy
+        )
 
     def run_to_completion(self, max_steps: int = 1 << 20) -> list[Request]:
         """Drain queue and slots (all arrivals already submitted)."""
         steps = 0
-        while self.sched.busy:
+        while self.busy:
             self.try_admit(float(steps))
-            if self.sched.decoding_slots():
+            if self.sched.decoding_slots() or (
+                self.crypto is not None and self.crypto.running_slots()
+            ):
                 self.step(float(steps))
             steps += 1
             if steps > max_steps:
                 raise RuntimeError("serve loop exceeded max_steps")
-        return self.sched.completed
+        if self.crypto is None:
+            return self.sched.completed
+        return list(self.sched.completed) + list(self.crypto.completed)
 
     def drain_completed(self) -> list[Request]:
         """Hand back the retired requests and release the engine-held
@@ -584,9 +783,14 @@ class ContinuousBatcher:
         ``rns_verify``, one device RnsArray per request) accumulates for
         the engine's lifetime."""
         done, self.sched.completed = self.sched.completed, []
+        if self.crypto is not None:
+            done = done + self.crypto.completed
+            self.crypto.completed = []
         if self.rns_verify:
             for r in done:
-                if not self.paged:
+                if getattr(r, "family", "llm") == "crypto":
+                    self.wire.pop(("crypto", r.rid), None)
+                elif not self.paged:
                     # paged wires are page-keyed and already released with
                     # their pages at retirement
                     self.wire.pop(r.rid, None)
@@ -606,6 +810,15 @@ class ContinuousBatcher:
             sizes["insert"] = self._insert_fn._cache_size()
         if self._fp_fn is not None:
             sizes["fingerprint"] = self._fp_fn._cache_size()
+        if self.crypto is not None:
+            for name in ("admit", "step", "final", "modmul", "divmod"):
+                sizes[f"crypto_{name}"] = (
+                    self._crypto_fns[name]._cache_size()
+                )
+            if self.rns_verify:
+                sizes["crypto_fingerprint"] = (
+                    self._crypto_fns["fp"]._cache_size()
+                )
         return sizes
 
     def page_stats(self) -> dict:
@@ -788,8 +1001,18 @@ class ContinuousBatcher:
         slot's table row (shared pages check against the original
         publisher's codeword — the dedup dataflow of DESIGN.md §13).
         Valid until the row/pages are reused by a later admission; the
-        engine calls this automatically at retirement."""
+        engine calls this automatically at retirement.
+
+        Crypto-family requests verify their lane slot's immutable device
+        rows (exponent bits + modulus channel constants) against the
+        ``("crypto", rid)`` codeword published at admission."""
         self._require_verify()
+        if getattr(req, "family", "llm") == "crypto":
+            fp = self._crypto_fns["fp"](
+                self.crypto_state, jnp.int32(req.slot_index)
+            )
+            fresh = self.codec.encode_array(fp, channel_major=True)
+            return self.wire.matches(("crypto", req.rid), fresh)
         if self.paged:
             ok = True
             for lp, pid in self.sched.slot_pages(req.slot_index):

@@ -83,6 +83,8 @@ class Request:
     max_new: int
     eos: int | None = None
     arrival: float = 0.0
+    family: str = "llm"      # engine dispatch tag; crypto requests carry
+    #                          "crypto" (serve/crypto.py CryptoRequest)
     # engine-filled:
     out: list = dataclasses.field(default_factory=list)
     slot_index: int | None = None

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from repro.models import decode_step, prefill
 
 __all__ = ["make_prefill", "make_decode_step", "cache_abstract",
-           "paged_pool_abstract", "prompt_abstract"]
+           "paged_pool_abstract", "prompt_abstract", "crypto_state_abstract"]
 
 
 def make_prefill(cfg, cache_len: int):
@@ -60,6 +60,27 @@ def cache_abstract(cfg, params_abs, batch: int, cache_len: int):
         lambda p, b: prefill(cfg, p, b, cache_len), params_abs, prompt
     )
     return cache
+
+
+def crypto_state_abstract(ctx, n_slots: int):
+    """Abstract device state of the crypto lane (DESIGN.md §15): one row
+    per slot holding the Montgomery-ladder registers in both bases, the
+    per-request channel constants of the modulus ``N`` (per-request DATA,
+    so one compiled graph serves every modulus mix), and the fixed-width
+    MSB-first exponent bit row the ladder consumes ``chunk`` at a time.
+
+    ``ctx`` is a ``serve.crypto.CryptoContext`` (duck-typed: only
+    ``nch_lo`` / ``n`` / ``n_hi`` / ``exp_bits`` and the base dtype are
+    read, so this module stays importable without the crypto stack).
+    """
+    dt = jnp.int32
+    row = lambda w: jax.ShapeDtypeStruct((n_slots, w), dt)
+    return {
+        "r0_lo": row(ctx.nch_lo), "r0_hi": row(ctx.n_hi),
+        "r1_lo": row(ctx.nch_lo), "r1_hi": row(ctx.n_hi),
+        "neg": row(ctx.n), "n_lo": row(ctx.nch_lo), "n_hi": row(ctx.n_hi),
+        "bits": row(ctx.exp_bits),
+    }
 
 
 def paged_pool_abstract(cfg, params_abs, n_pages: int, page_size: int):

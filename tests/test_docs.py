@@ -25,6 +25,8 @@ DOCTEST_MODULES = (
     "repro.core.extend",
     "repro.serve.scheduler",
     "repro.serve.batcher",
+    "repro.serve.crypto",
+    "repro.core.montgomery",
     "repro.train.checkpointer",
 )
 
