@@ -17,6 +17,7 @@ additionally writes the same rows as machine-readable JSON (default
   division_scaling     comparison-driven divmod / scaling costs
   serve_batching       continuous batching vs one-at-a-time serving
   serve_paged          paged prefix-sharing pool vs the monolithic cache
+  serve_offline        saturation harness vs the synchronous tick driver
   ckpt_async           async RRNS checkpointer stall vs blocking saves
   crypto_modexp        batched crypto lane vs solo ladders, Pallas vs jnp
 
@@ -518,6 +519,95 @@ def serve_paged():
          f"pages_monolithic_equiv={4 * (cache_len // page)}")
 
 
+def serve_offline():
+    """Saturation harness (DESIGN.md §16) vs the synchronous tick-clock
+    driver on the same offline trace.  The harness pipeline = length-
+    bucketed single-call prefill (ONE extend dispatch per prompt vs the
+    baseline's ceil(plen/chunk) chunk loop) + a background completion
+    pump running the detokenize callback (a sha256 over a 256 KiB
+    payload per completion — releases the GIL like a real tokenizer's
+    native code) off the driver thread; the baseline replays the
+    identical trace through ``simulate()`` and runs the identical
+    callback inline, serialized behind device work.  The gated metric is
+    ``overlap_ratio`` — harness tok/s over baseline tok/s, each the
+    best of SERVE_PASSES passes.  The floor holds machine-independently
+    because the dispatch-count advantage alone clears it even on a
+    single-core host (where threads cannot physically overlap); on
+    multi-core runners the pump's overlap adds margin on top."""
+    import hashlib
+
+    from repro.configs import get_config
+    from repro.launch.serve import simulate
+    from repro.models import init_params
+    from repro.serve.batcher import ContinuousBatcher
+    from repro.serve.offline import OfflineInference
+    from repro.serve.scheduler import Request
+
+    cfg = get_config("gemma-2b").smoke()
+    params = init_params(cfg, jax.random.key(0))
+    cache_len, chunk, max_new = 64, 8, 8
+    n = max(SERVE_REQS, 8)  # enough completions for the pump to matter
+    payload = np.random.default_rng(3).bytes(256 << 10)
+
+    def callback(req):
+        return hashlib.sha256(payload).hexdigest()
+
+    def workload(rid0):
+        # prompts of 8..48 tokens: 1..6 chunk-loop dispatches baseline,
+        # always exactly one bucketed dispatch on the harness
+        rng = np.random.default_rng(17)
+        return [
+            Request(
+                rid=rid0 + i,
+                prompt=[int(t) for t in
+                        rng.integers(1, cfg.vocab,
+                                     8 + int(rng.integers(0, 41)))],
+                max_new=max_new, arrival=0.0,
+            )
+            for i in range(n)
+        ]
+
+    harness = OfflineInference(
+        cfg, params, n_slots=4, cache_len=cache_len, prefill_chunk=chunk,
+        buckets=(16, 32, 64), overlap=True, queue_size=16,
+        callback=callback,
+    )
+    harness.warmup()
+    best_h, rep = 0.0, None
+    for p in range(SERVE_PASSES):       # best-of-N rides out runner noise
+        r = harness.run(workload(1000 * (p + 1)))
+        if r["tok_per_s"] > best_h:
+            best_h, rep = r["tok_per_s"], r
+    harness.require_steady_state()
+
+    eng = ContinuousBatcher(cfg, params, n_slots=4, cache_len=cache_len,
+                            prefill_chunk=chunk)
+    simulate(eng, workload(0))           # warmup: compile + one full pass
+    [callback(r) for r in eng.sched.completed]
+    best_s = 0.0
+    for p in range(SERVE_PASSES):
+        n_warm = len(eng.sched.completed)
+        t0 = time.perf_counter()
+        simulate(eng, workload(1000 * (p + 1)))
+        done = eng.sched.completed[n_warm:]
+        for r in done:                   # host work serialized, not overlapped
+            callback(r)
+        wall = time.perf_counter() - t0
+        toks = sum(len(r.out) for r in done)
+        best_s = max(best_s, toks / wall)
+
+    bk = rep["buckets"]
+    emit("offline_tokps", 1e6 / best_h,
+         f"tok_per_s={best_h:.1f},"
+         f"tok_per_s_per_chip={best_h / rep['n_chips']:.1f},"
+         f"pump_max_depth={rep['overlap']['max_depth']},"
+         f"pad_overhead={bk['pad_overhead']:.3f}")
+    emit("offline_sync_tokps", 1e6 / best_s, f"tok_per_s={best_s:.1f}")
+    emit("offline_overlap_ratio", 0,
+         f"overlap_ratio={best_h / best_s:.3f},"
+         f"retrace_free={int(rep['retrace_free'])}")
+
+
 # ------------------------------------------------------------ checkpointer
 CKPT_STEPS = 6
 
@@ -719,6 +809,7 @@ TABLES = [
     rns_array_api,
     serve_batching,
     serve_paged,
+    serve_offline,
     ckpt_async,
     crypto_modexp,
     division_scaling,
@@ -771,8 +862,10 @@ def main(argv=None) -> None:
         with open(args.json_api, "w") as f:
             json.dump(api_rows, f, indent=1, sort_keys=True)
         print(f"# wrote {len(api_rows)} rows to {args.json_api}")
+        # serve_* = tick-clock engine rows, offline_* = saturation-harness
+        # rows (DESIGN.md §16) — one committed trajectory file for both
         serve_rows = {k: v for k, v in RESULTS.items()
-                      if k.startswith("serve_")}
+                      if k.startswith(("serve_", "offline_"))}
         with open(args.json_serve, "w") as f:
             json.dump(serve_rows, f, indent=1, sort_keys=True)
         print(f"# wrote {len(serve_rows)} rows to {args.json_serve}")

@@ -1,0 +1,61 @@
+# Copyright 2026 the repro authors
+#
+# JAX profiler capture windows for the drivers (levanter's
+# Performance-Guide pattern: a start step + a step count on the command
+# line, one trace artifact per run).  Shared by ``launch/train.py``
+# (``--profile-start-step/--profile-steps``) and ``launch/serve.py``
+# (same flags; a "step" is one driver tick / offline loop iteration).
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+__all__ = ["ProfilerWindow"]
+
+
+class ProfilerWindow:
+    """Capture steps ``[start, start + n)`` of a driver loop.
+
+    Call ``step()`` once at the top of every driver iteration; the
+    window starts/stops ``jax.profiler`` around the configured slice and
+    ``close()`` (always call it — a crashed run must not leave the
+    profiler armed) stops a still-open trace.  Disabled entirely when
+    ``start < 0`` or ``n < 1``, so drivers can construct one
+    unconditionally.  The artifact lands under
+    ``<outdir>/profile_<label>/`` (TensorBoard's XPlane layout).
+    """
+
+    def __init__(self, start: int, n: int, outdir: str, label: str = "run"):
+        self.enabled = start >= 0 and n >= 1
+        self.start, self.n = int(start), int(n)
+        self.logdir = os.path.join(outdir, f"profile_{label}")
+        self.artifact: str | None = None
+        self.captured = 0
+        self._step = 0
+        self._active = False
+        self._done = False
+
+    def step(self) -> None:
+        if not self.enabled or self._done:
+            return
+        if not self._active and self._step == self.start:
+            os.makedirs(self.logdir, exist_ok=True)
+            jax.profiler.start_trace(self.logdir)
+            self._active = True
+            self.artifact = self.logdir
+        elif self._active:
+            self.captured += 1
+            if self.captured >= self.n:
+                jax.profiler.stop_trace()
+                self._active = False
+                self._done = True
+        self._step += 1
+
+    def close(self) -> None:
+        """Stop a still-open capture (loop ended inside the window)."""
+        if self._active:
+            jax.profiler.stop_trace()
+            self._active = False
+            self._done = True

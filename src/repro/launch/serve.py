@@ -45,12 +45,34 @@ Families the batcher gates out (ssm/hybrid/encdec/vlm) fall back to a
 single-shot sequential loop (``report["engine"] == "single-shot"``) so
 every arch in the zoo stays servable; ``--rns-verify`` requires the slot
 engine and raises for them.
+
+``--mode`` selects the measurement layer (DESIGN.md §16):
+
+* ``sim`` (default) — the deterministic tick-clock replay above.
+* ``offline`` — the MLPerf-offline-style saturation harness
+  (``serve/offline.py``): every request available at t=0, length-
+  bucketed single-call prefill (``--buckets``), a background completion
+  pump overlapping host work with device decode (``--no-overlap``
+  measures the synchronous baseline), ``--replicas`` data-parallel
+  engines behind one shared admission queue, and wall-clock TTFT /
+  latency / tok/s / tok/s-per-chip stats with a steady-state
+  zero-retrace assertion.
+* ``loadgen`` — the closed-loop QPS search (``serve/loadgen.py``):
+  binary-searches the max sustainable offered QPS whose measured phase
+  meets the TTFT/latency SLO (``--slo-ttft-ms/--slo-p99-ms``), between
+  ``--qps-lo`` and ``--qps-hi``; the report carries every phase plus an
+  SLO-pass attestation of the best passing phase.
+
+``--profile-start-step/--profile-steps`` capture a JAX profiler trace
+of that window of driver steps (decode ticks in ``sim``, loop
+iterations in ``offline``/``loadgen``) into the report directory.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import math
+import os
 import time
 from collections import Counter
 
@@ -60,9 +82,13 @@ import jax
 
 import repro  # noqa: F401
 from repro.configs import get_config
+from repro.launch.profiling import ProfilerWindow
 from repro.models import init_params
 from repro.serve.batcher import ContinuousBatcher
 from repro.serve.crypto import CryptoRequest
+from repro.serve.offline import (
+    OfflineInference, pow2_buckets, sample_stats,
+)
 from repro.serve.scheduler import Request
 
 FAMILIES = ("llm", "crypto")
@@ -194,11 +220,10 @@ def save_trace(path: str, reqs: list) -> None:
 
 
 def _stats(xs: list) -> dict:
-    if not xs:
-        return {"mean": 0.0, "p50": 0.0, "p95": 0.0}
-    a = np.asarray(xs, np.float64)
-    return {"mean": float(a.mean()), "p50": float(np.percentile(a, 50)),
-            "p95": float(np.percentile(a, 95))}
+    """Latency summary; an empty sample (a family filter can leave zero
+    completions) returns the explicit ``n: 0`` record instead of
+    crashing percentile on ``[]``."""
+    return sample_stats(xs)
 
 
 def simulate_single_shot(cfg, params, reqs: list, rng) -> tuple:
@@ -259,9 +284,11 @@ def simulate_single_shot(cfg, params, reqs: list, rng) -> tuple:
         {"steps": steps, "max_concurrency": 1}
 
 
-def simulate(engine: ContinuousBatcher, reqs: list) -> dict:
+def simulate(engine: ContinuousBatcher, reqs: list,
+             on_step=None) -> dict:
     """Run the arrival/admission/decode loop to completion; returns the
-    tick-clock counters (requests stamp their own t_* fields)."""
+    tick-clock counters (requests stamp their own t_* fields).
+    ``on_step`` fires once per decode tick (profiler hook)."""
     reqs = sorted(reqs, key=lambda r: r.arrival)
     t, i, steps, max_conc = 0.0, 0, 0, 0
     while i < len(reqs) or engine.busy:
@@ -274,12 +301,134 @@ def simulate(engine: ContinuousBatcher, reqs: list) -> dict:
                      if engine.crypto is not None else [])
         if decoding or laddering:
             max_conc = max(max_conc, len(decoding) + len(laddering))
+            if on_step is not None:
+                on_step()
             engine.step(now=t)
             t += 1.0
             steps += 1
         elif i < len(reqs):
             t = math.ceil(reqs[i].arrival)  # idle: fast-forward the clock
     return {"steps": steps, "max_concurrency": max_conc}
+
+
+def _crypto_report(crypto_done: list, ctx, *, clock_key: str) -> dict:
+    """Crypto block of the report: every result is differentially
+    checkable against Python's big ints, so the oracle check runs
+    inline; ``clock_key`` names the timebase (ticks in sim mode, wall
+    seconds in offline mode)."""
+    ok = 0
+    for r in crypto_done:
+        want = (divmod(r.a, r.b) if r.op == "divmod"
+                else pow(r.a % r.n, r.b, r.n) if r.op == "modexp"
+                else (r.a * r.b) % r.n)
+        ok += int(r.result == want)
+    return {
+        "requests": len(crypto_done),
+        "ops": dict(Counter(r.op for r in crypto_done)),
+        "range_bits": ctx.baseB.M.bit_length(),
+        "exp_bits": ctx.exp_bits,
+        "oracle_ok": ok,
+        "oracle_failed": len(crypto_done) - ok,
+        clock_key: _stats([r.t_done - r.arrival for r in crypto_done]),
+    }
+
+
+def _parse_buckets(spec: str, cache_len: int, ap) -> tuple | None:
+    if spec == "none":
+        return None
+    if spec == "pow2":
+        return pow2_buckets(cache_len)
+    try:
+        buckets = tuple(int(b) for b in spec.split(","))
+    except ValueError:
+        ap.error(f"--buckets takes 'pow2', 'none', or a comma list of "
+                 f"ints; got {spec!r}")
+    return buckets
+
+
+def _offline_main(args, ap, cfg, params, reqs, crypto_ctx, rng,
+                  window) -> dict:
+    """``--mode offline|loadgen``: the wall-clock saturation harness
+    (DESIGN.md §16) instead of the tick-clock replay."""
+    buckets = _parse_buckets(args.buckets, args.cache_len, ap)
+    try:
+        harness = OfflineInference(
+            cfg, params, n_slots=args.slots, cache_len=args.cache_len,
+            prefill_chunk=args.prefill_chunk, buckets=buckets,
+            replicas=args.replicas, overlap=args.overlap,
+            queue_size=args.queue_size, rns_verify=args.rns_verify,
+            crypto_slots=args.crypto_slots, crypto_ctx=crypto_ctx,
+            crypto_chunk=args.crypto_chunk,
+        )
+    except NotImplementedError as err:
+        ap.error(f"--mode {args.mode} needs the continuous-batching "
+                 f"engine for {cfg.name}: {err}")
+    warm = harness.warmup()
+    print(f"# warmup: {len(warm['warmed_plens'])} prefill width(s) x "
+          f"{warm['replicas']} replica(s) compiled: {warm['jit_traces']}")
+    harness.on_step = window.step
+    report = {
+        "arch": cfg.name,
+        "mode": args.mode,
+        "engine": "offline-harness",
+        "n_slots": args.slots,
+        "cache_len": args.cache_len,
+        "warmup": warm,
+    }
+    try:
+        if args.mode == "offline":
+            for r in reqs:
+                r.arrival = 0.0  # offline scenario: all available at t=0
+            report.update(harness.run(reqs))
+            harness.require_steady_state()
+            crypto_done = [r for r, _ in harness.completions
+                           if getattr(r, "family", "llm") == "crypto"]
+            if crypto_done:
+                report["crypto"] = _crypto_report(
+                    crypto_done, harness.engines[0].crypto_ctx,
+                    clock_key="latency_s")
+            if args.rns_verify:
+                report["rns"] = {
+                    "slots_verified": harness.replica_set.verify_ok,
+                    "slots_failed": harness.replica_set.verify_failed,
+                }
+        else:
+            from repro.serve.loadgen import (
+                SLO, poisson_requests, search_max_qps,
+            )
+
+            slo = SLO(ttft_p99_s=args.slo_ttft_ms / 1e3,
+                      latency_p99_s=args.slo_p99_ms / 1e3)
+            rid_counter = [0]
+
+            def make_requests(n, qps):
+                rid0 = rid_counter[0]
+                rid_counter[0] += n
+                return poisson_requests(
+                    n, qps, rng, vocab=cfg.vocab,
+                    prompt_mean=args.prompt_mean, max_new=args.max_new,
+                    cache_len=args.cache_len, rid0=rid0,
+                )
+
+            out = search_max_qps(
+                harness, make_requests, slo, qps_lo=args.qps_lo,
+                qps_hi=args.qps_hi, iters=args.qps_iters,
+                phase_requests=args.phase_requests,
+            )
+            harness.require_steady_state()
+            report.update(out)
+            print(f"# loadgen: {out['note']}")
+    finally:
+        window.close()
+    if window.enabled:
+        report["profile"] = {"artifact": window.artifact,
+                             "captured_steps": window.captured}
+    print(json.dumps(report, indent=1))
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"# wrote report to {args.report}")
+    return report
 
 
 def main(argv=None) -> dict:
@@ -349,12 +498,68 @@ def main(argv=None) -> dict:
                          "run's retained prefix pages before serving, and "
                          "persist this run's pool state there afterwards "
                          "(DESIGN.md §14)")
+    ap.add_argument("--mode", choices=("sim", "offline", "loadgen"),
+                    default="sim",
+                    help="sim: deterministic tick-clock replay (default); "
+                         "offline: wall-clock saturation harness; loadgen: "
+                         "closed-loop max-QPS search (DESIGN.md §16)")
+    ap.add_argument("--buckets", default="pow2", metavar="SPEC",
+                    help="offline prefill buckets: 'pow2' (power-of-two "
+                         "ladder up to cache-len, the default), 'none' "
+                         "(chunked prefill), or a comma list like "
+                         "'32,64,128'")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel engine replicas behind one shared "
+                         "admission queue (offline/loadgen)")
+    ap.add_argument("--queue-size", type=int, default=64,
+                    help="bound of the completion pump's queue "
+                         "(backpressure depth)")
+    ap.add_argument("--no-overlap", dest="overlap", action="store_false",
+                    help="run completion callbacks inline on the driver "
+                         "thread — the synchronous baseline the overlap "
+                         "ratio is measured against")
+    ap.set_defaults(overlap=True)
+    ap.add_argument("--qps-lo", type=float, default=0.5,
+                    help="loadgen search floor (offered QPS)")
+    ap.add_argument("--qps-hi", type=float, default=64.0,
+                    help="loadgen search ceiling (offered QPS)")
+    ap.add_argument("--qps-iters", type=int, default=4,
+                    help="loadgen bisections after the bracket probes")
+    ap.add_argument("--phase-requests", type=int, default=16,
+                    help="requests per measured loadgen phase")
+    ap.add_argument("--slo-ttft-ms", type=float, default=2000.0,
+                    help="SLO: TTFT p99 bound (milliseconds)")
+    ap.add_argument("--slo-p99-ms", type=float, default=10000.0,
+                    help="SLO: end-to-end latency p99 bound (ms)")
+    ap.add_argument("--profile-start-step", type=int, default=-1,
+                    metavar="N",
+                    help="driver step at which to start a JAX profiler "
+                         "trace (-1 disables; a step is a decode tick in "
+                         "sim, a loop iteration in offline/loadgen)")
+    ap.add_argument("--profile-steps", type=int, default=0, metavar="N",
+                    help="driver steps to capture in the profiler window")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="profiler artifact directory (default: the "
+                         "--report directory, else '.')")
     args = ap.parse_args(argv)
     if args.warm_restart and (args.page_size is None or not args.rns_verify
                               or not args.prefix_share):
         ap.error("--warm-restart needs --page-size, --rns-verify, and "
                  "prefix sharing (the persisted state IS the retained "
                  "pages plus their RRNS fingerprints)")
+    if args.mode != "sim":
+        bad = [f for f, v in (
+            ("--page-size", args.page_size is not None),
+            ("--warm-restart", bool(args.warm_restart)),
+            ("--inject-wire-corrupt", args.inject_wire_corrupt),
+        ) if v]
+        if bad:
+            ap.error(f"--mode {args.mode} drives the monolithic wall-clock "
+                     f"harness; drop {', '.join(bad)}")
+    if args.mode == "loadgen" and (args.trace or args.crypto_requests
+                                   or args.crypto_slots):
+        ap.error("--mode loadgen synthesizes its own Poisson LLM phases; "
+                 "drop --trace / --crypto-*")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -401,6 +606,16 @@ def main(argv=None) -> dict:
                  "--crypto-slots >= 1 to arm the crypto lane (or filter "
                  "them out with --families llm)")
 
+    profdir = args.profile_dir or (
+        os.path.dirname(os.path.abspath(args.report)) if args.report
+        else "."
+    )
+    window = ProfilerWindow(args.profile_start_step, args.profile_steps,
+                            profdir, label=f"serve_{args.mode}")
+    if args.mode != "sim":
+        return _offline_main(args, ap, cfg, params, reqs, crypto_ctx,
+                             rng, window)
+
     try:
         engine = ContinuousBatcher(
             cfg, params, n_slots=args.slots, cache_len=args.cache_len,
@@ -433,13 +648,16 @@ def main(argv=None) -> dict:
                   f"yet (cold start)")
     t0 = time.time()
     crypto_done = []
-    if engine is not None:
-        counters = simulate(engine, reqs)
-        done = engine.sched.completed
-        if engine.crypto is not None:
-            crypto_done = engine.crypto.completed
-    else:
-        done, counters = simulate_single_shot(cfg, params, reqs, rng)
+    try:
+        if engine is not None:
+            counters = simulate(engine, reqs, on_step=window.step)
+            done = engine.sched.completed
+            if engine.crypto is not None:
+                crypto_done = engine.crypto.completed
+        else:
+            done, counters = simulate_single_shot(cfg, params, reqs, rng)
+    finally:
+        window.close()
     wall = time.time() - t0
 
     toks = sum(len(r.out) for r in done)
@@ -462,24 +680,11 @@ def main(argv=None) -> dict:
         if engine.paged:
             report["paging"] = engine.page_stats()
     if crypto_done:
-        # every crypto result is differentially checkable against Python's
-        # big ints — the report performs the oracle check inline
-        ok = 0
-        for r in crypto_done:
-            want = (divmod(r.a, r.b) if r.op == "divmod"
-                    else pow(r.a % r.n, r.b, r.n) if r.op == "modexp"
-                    else (r.a * r.b) % r.n)
-            ok += int(r.result == want)
-        report["crypto"] = {
-            "requests": len(crypto_done),
-            "ops": dict(Counter(r.op for r in crypto_done)),
-            "range_bits": engine.crypto_ctx.baseB.M.bit_length(),
-            "exp_bits": engine.crypto_ctx.exp_bits,
-            "oracle_ok": ok,
-            "oracle_failed": len(crypto_done) - ok,
-            "latency_ticks": _stats(
-                [r.t_done - r.arrival for r in crypto_done]),
-        }
+        report["crypto"] = _crypto_report(
+            crypto_done, engine.crypto_ctx, clock_key="latency_ticks")
+    if window.enabled:
+        report["profile"] = {"artifact": window.artifact,
+                             "captured_steps": window.captured}
     if args.rns_verify:
         # wire keys: rids on the monolithic path (one per retired request,
         # still stored), page ids on the paged path (only RETAINED shared

@@ -122,6 +122,16 @@ def main(argv=None):
                          "codec (A/B against the fused Pallas kernels)")
     ap.add_argument("--watchdog-x", type=float, default=3.0,
                     help="warn when a step exceeds x * median step time")
+    ap.add_argument("--profile-start-step", type=int, default=-1,
+                    metavar="N",
+                    help="train step at which to start a JAX profiler "
+                         "trace (-1 disables; levanter Performance-Guide "
+                         "pattern: start step + step count)")
+    ap.add_argument("--profile-steps", type=int, default=0, metavar="N",
+                    help="train steps to capture in the profiler window")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="profiler artifact directory (default: "
+                         "--ckpt-dir when set, else '.')")
     args = ap.parse_args(argv)
     if args.inject_corrupt_step >= 0 and not args.rns_correct:
         ap.error("--inject-corrupt-step needs --rns-correct (there is no "
@@ -210,9 +220,16 @@ def main(argv=None):
         print(f"[ckpt] policy {policy!r}, "
               f"keep {'all' if not args.ckpt_keep else args.ckpt_keep}, "
               f"async RRNS-coded saves under {args.ckpt_dir}")
+    from repro.launch.profiling import ProfilerWindow
+
+    window = ProfilerWindow(
+        args.profile_start_step, args.profile_steps,
+        args.profile_dir or args.ckpt_dir or ".", label="train",
+    )
     times = []
     try:
         for _ in range(start_step, args.steps):
+            window.step()
             step, batch = prefetch.next()
             t0 = time.time()
             fn = (inject_fn if inject_fn is not None
@@ -243,9 +260,13 @@ def main(argv=None):
                                  {"params": params, "opt": opt_state},
                                  extra={"opt_step": int(metrics["opt_step"])})
     finally:
+        window.close()
         prefetch.close()
         if saver is not None:
             saver.close()  # drain the queue; re-raise any failed save
+    if window.enabled and window.artifact:
+        print(f"[profile] captured {window.captured} step(s) under "
+              f"{window.artifact}")
     print("done")
     return params
 

@@ -1,7 +1,13 @@
-"""Serving substrate: prefill/decode steps over sharded caches plus the
+"""Serving substrate: prefill/decode steps over sharded caches, the
 continuous-batching engine (slot scheduler + persistent-jit batcher,
-DESIGN.md §12)."""
+DESIGN.md §12), and the saturation-grade offline harness + closed-loop
+load generator on top of it (DESIGN.md §16)."""
 from .serve_step import make_prefill, make_decode_step, cache_abstract  # noqa: F401
 from .scheduler import Request, Slot, SlotScheduler  # noqa: F401
 from .batcher import ContinuousBatcher  # noqa: F401
 from .crypto import CryptoContext, CryptoRequest  # noqa: F401
+from .offline import (  # noqa: F401
+    CompletionPump, OfflineInference, ReplicaSet, pow2_buckets,
+    replica_meshes, sample_stats,
+)
+from .loadgen import SLO, poisson_requests, search_max_qps  # noqa: F401

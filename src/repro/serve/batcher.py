@@ -106,6 +106,15 @@ class ContinuousBatcher:
         ``len(prompt) + max_new <= cache_len``.
     prefill_chunk : token-chunk size of the admission prefill loop — long
         prompts run as ceil(plen/chunk) calls of ONE fixed-shape graph.
+    prefill_buckets : optional ascending tuple of prompt-length buckets
+        (monolithic path only).  Admission pads the prompt to the
+        smallest bucket >= plen and runs ONE extend call per prompt
+        instead of the chunk loop — one compiled graph per bucket width,
+        pre-compiled by the offline harness's warmup.  Prompts longer
+        than the largest bucket fall back to the chunked loop (counted
+        in ``bucket_stats()``).  Bitwise-identical to chunked prefill:
+        pad positions beyond plen are causally invisible and later
+        overwritten by decode writes.
     rns_verify : arm the RnsArray cache-integrity fingerprints.
     mesh : optional ``jax.sharding.Mesh``; the batched cache is placed on
         ``dist.sharding.cache_specs``' layout over it.
@@ -132,7 +141,9 @@ class ContinuousBatcher:
     """
 
     def __init__(self, cfg, params, *, n_slots: int, cache_len: int,
-                 prefill_chunk: int = 32, rns_verify: bool = False,
+                 prefill_chunk: int = 32,
+                 prefill_buckets: tuple | None = None,
+                 rns_verify: bool = False,
                  mesh=None, page_size: int | None = None,
                  n_pages: int | None = None, prefix_share: bool = True,
                  crypto_slots: int = 0, crypto_ctx=None,
@@ -175,6 +186,37 @@ class ContinuousBatcher:
         self.rns_verify = bool(rns_verify)
         self.paged = page_size is not None
         self.page_size = int(page_size) if self.paged else None
+
+        self.prefill_buckets: tuple[int, ...] | None = None
+        if prefill_buckets is not None:
+            if self.paged:
+                raise NotImplementedError(
+                    "prefill_buckets pads straight into the solo cache + "
+                    "insert splice; the paged pool prefills through the "
+                    "page table per chunk — bucket it after the pool "
+                    "grows a padded write barrier"
+                )
+            bks = tuple(sorted({int(b) for b in prefill_buckets}))
+            if not bks:
+                raise ValueError("prefill_buckets must name >= 1 bucket")
+            for b in bks:
+                if b < 1 or b > cache_len:
+                    raise ValueError(
+                        f"bucket {b} out of range 1..cache_len={cache_len}"
+                    )
+                if b > 512 and b % 512:
+                    raise ValueError(
+                        f"bucket {b} beyond one flash chunk must be a "
+                        f"multiple of 512 (the padded extend runs the "
+                        f"chunked attention)"
+                    )
+            self.prefill_buckets = bks
+            # admission-time accounting the offline harness reports:
+            # hits per bucket width, chunk-loop fallbacks, pad waste
+            self.bucket_hits: dict[int, int] = {b: 0 for b in bks}
+            self.bucket_fallbacks = 0
+            self.bucket_pad_tokens = 0
+            self.bucket_real_tokens = 0
 
         if self.paged:
             ps = self.page_size
@@ -505,19 +547,41 @@ class ContinuousBatcher:
         req = slot.req
         prompt = [int(t) for t in req.prompt]
         plen, C = len(prompt), self.prefill_chunk
-        n_chunks = -(-plen // C)
-        prompt = prompt + [0] * (n_chunks * C - plen)
         solo = self._solo_zero
-        last = (plen - 1) - (n_chunks - 1) * C
-        for ci in range(n_chunks):
-            toks = jnp.asarray([prompt[ci * C:(ci + 1) * C]], jnp.int32)
-            # only the final chunk's last REAL prompt position is ever
-            # read (chunk padding beyond it is causally invisible below
-            # it); the traced index keeps the unembed to one row per call
-            idx = last if ci == n_chunks - 1 else 0
-            logits, solo = self._extend_fn(
-                self.params, solo, toks, jnp.int32(ci * C), jnp.int32(idx)
+        bucket = self._pick_bucket(plen)
+        if bucket is not None:
+            # bucketed path: ONE padded extend call — the graph keys only
+            # on the bucket width; pad junk beyond plen-1 is causally
+            # invisible (logit_index reads the last real position) and
+            # decode writes overwrite it before it can ever be attended
+            toks = jnp.asarray(
+                [prompt + [0] * (bucket - plen)], jnp.int32
             )
+            logits, solo = self._extend_fn(
+                self.params, solo, toks, jnp.int32(0), jnp.int32(plen - 1)
+            )
+            self.bucket_hits[bucket] += 1
+            self.bucket_pad_tokens += bucket - plen
+            self.bucket_real_tokens += plen
+        else:
+            if self.prefill_buckets is not None:
+                self.bucket_fallbacks += 1
+            n_chunks = -(-plen // C)
+            prompt = prompt + [0] * (n_chunks * C - plen)
+            last = (plen - 1) - (n_chunks - 1) * C
+            for ci in range(n_chunks):
+                toks = jnp.asarray(
+                    [prompt[ci * C:(ci + 1) * C]], jnp.int32
+                )
+                # only the final chunk's last REAL prompt position is ever
+                # read (chunk padding beyond it is causally invisible
+                # below it); the traced index keeps the unembed to one
+                # row per call
+                idx = last if ci == n_chunks - 1 else 0
+                logits, solo = self._extend_fn(
+                    self.params, solo, toks, jnp.int32(ci * C),
+                    jnp.int32(idx)
+                )
         first = int(jnp.argmax(logits[0, 0]))
         self.cache = self._insert_fn(
             self.cache, solo, jnp.int32(slot.index)
@@ -799,7 +863,11 @@ class ContinuousBatcher:
 
     def jit_cache_sizes(self) -> dict:
         """Compiled-graph counts per engine function — the no-retrace
-        invariant says every value stays 1 for the engine's lifetime."""
+        invariant says every value stays 1 for the engine's lifetime
+        (with ``prefill_buckets`` armed, ``extend`` instead stays at the
+        number of distinct padded widths the warmup compiled: the graph
+        keys on token shape, and every width is pre-compiled before
+        timed traffic)."""
         sizes = {
             "decode": self._decode_fn._cache_size(),
             "extend": self._extend_fn._cache_size(),
@@ -820,6 +888,32 @@ class ContinuousBatcher:
                     self._crypto_fns["fp"]._cache_size()
                 )
         return sizes
+
+    def _pick_bucket(self, plen: int) -> int | None:
+        """Smallest armed bucket >= plen, or None (buckets off / prompt
+        longer than every bucket -> chunk-loop fallback)."""
+        if self.prefill_buckets is None:
+            return None
+        for b in self.prefill_buckets:
+            if b >= plen:
+                return b
+        return None
+
+    def bucket_stats(self) -> dict:
+        """Bucketed-prefill accounting: hits per width, chunk-loop
+        fallbacks, and pad overhead (pad tokens / real tokens) — the
+        ``buckets`` block of the offline harness report."""
+        if self.prefill_buckets is None:
+            raise RuntimeError("engine built without prefill_buckets=")
+        real = self.bucket_real_tokens
+        return {
+            "widths": list(self.prefill_buckets),
+            "hits": {str(b): n for b, n in self.bucket_hits.items()},
+            "fallbacks": self.bucket_fallbacks,
+            "pad_tokens": self.bucket_pad_tokens,
+            "real_tokens": real,
+            "pad_overhead": (self.bucket_pad_tokens / real) if real else 0.0,
+        }
 
     def page_stats(self) -> dict:
         """Pool / dedup / CoW counters (paged mode), plus the per-page

@@ -80,6 +80,90 @@ def test_serve_driver_single_shot_fallback(arch):
     assert "jit_traces" not in report
 
 
+def test_serve_driver_offline_mode(tmp_path):
+    """--mode offline: warmed bucketed harness, retrace-free, report
+    carries the saturation metrics and the overlap/bucket blocks."""
+    from repro.launch.serve import main as serve_main
+
+    report = serve_main([
+        "--arch", "gemma-2b", "--mode", "offline", "--requests", "6",
+        "--slots", "2", "--cache-len", "32", "--prefill-chunk", "8",
+        "--buckets", "8,16,32", "--max-new", "4", "--prompt-mean", "6",
+        "--report", str(tmp_path / "offline.json"),
+    ])
+    assert report["engine"] == "offline-harness"
+    assert report["retrace_free"] is True
+    assert report["requests"] == 6 and report["tokens_out"] == 24
+    assert report["buckets"]["fallbacks"] == 0
+    assert report["overlap"]["enabled"] and report["overlap"]["processed"] == 6
+    assert report["ttft_s"]["n"] == 6
+    assert (tmp_path / "offline.json").exists()
+
+
+def test_serve_driver_loadgen_mode(tmp_path):
+    """--mode loadgen: the QPS search runs to an SLO-pass attestation of
+    a measured phase (generous SLO + low bracket keeps it fast)."""
+    from repro.launch.serve import main as serve_main
+
+    report = serve_main([
+        "--arch", "gemma-2b", "--mode", "loadgen", "--slots", "2",
+        "--cache-len", "32", "--prefill-chunk", "8",
+        "--buckets", "8,16,32", "--max-new", "4", "--prompt-mean", "6",
+        "--qps-lo", "20", "--qps-hi", "80", "--qps-iters", "1",
+        "--phase-requests", "4",
+        "--report", str(tmp_path / "loadgen.json"),
+    ])
+    assert report["mode"] == "loadgen"
+    assert report["phases"]  # full transcript in the report
+    if report["slo_pass"]:
+        at = report["attestation"]
+        assert at["slo_pass"] and at["retrace_free"]
+        assert any(p["offered_qps"] == at["offered_qps"]
+                   for p in report["phases"] if p["slo_pass"])
+    assert (tmp_path / "loadgen.json").exists()
+
+
+def test_serve_driver_mode_flag_validation():
+    from repro.launch.serve import main as serve_main
+
+    with pytest.raises(SystemExit):
+        serve_main(["--mode", "offline", "--page-size", "8"])
+    with pytest.raises(SystemExit):
+        serve_main(["--mode", "loadgen", "--crypto-slots", "1"])
+    with pytest.raises(SystemExit):
+        serve_main(["--mode", "offline", "--buckets", "nope"])
+
+
+def test_serve_driver_profiler_window(tmp_path):
+    from repro.launch.serve import main as serve_main
+
+    report = serve_main([
+        "--arch", "gemma-2b", "--requests", "2", "--slots", "2",
+        "--cache-len", "32", "--prefill-chunk", "8", "--max-new", "4",
+        "--prompt-mean", "6", "--profile-start-step", "1",
+        "--profile-steps", "2", "--profile-dir", str(tmp_path),
+    ])
+    prof = report["profile"]
+    assert prof["captured_steps"] == 2
+    assert prof["artifact"] and os.path.isdir(prof["artifact"])
+    # the trace actually hit disk (an .xplane.pb under plugins/profile)
+    hits = [f for _, _, fs in os.walk(prof["artifact"]) for f in fs
+            if f.endswith(".xplane.pb")]
+    assert hits, f"no xplane trace under {prof['artifact']}"
+
+
+def test_train_driver_profiler_window(tmp_path, capsys):
+    from repro.launch.train import main as train_main
+
+    train_main(["--arch", "gemma-2b", "--steps", "4", "--batch", "2",
+                "--seq", "16", "--profile-start-step", "1",
+                "--profile-steps", "2", "--profile-dir", str(tmp_path)])
+    assert "[profile] captured 2 step(s)" in capsys.readouterr().out
+    hits = [f for _, _, fs in os.walk(str(tmp_path)) for f in fs
+            if f.endswith(".xplane.pb")]
+    assert hits, f"no xplane trace under {tmp_path}"
+
+
 def test_serve_driver_rejects_duplicate_rids(tmp_path):
     from repro.launch.serve import main as serve_main
 

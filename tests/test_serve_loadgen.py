@@ -1,0 +1,163 @@
+"""Closed-loop QPS search invariants (DESIGN.md §16).
+
+* the SLO check fires on each clause independently (TTFT p99, latency
+  p99, tail-compensated saturation wall) and a keeping-up phase passes;
+* ``poisson_requests`` synthesizes a well-formed open-loop phase
+  (monotone arrivals, prompts that fit the cache, fresh rids);
+* ``search_max_qps`` converges deterministically on a modeled system —
+  the bracket protocol (floor fail / ceiling pass / bisect) and the
+  attestation contract (always a MEASURED passing phase, never an
+  interpolation) are exercised against a queueing stub;
+* one real harness phase under a generous SLO passes end to end.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+import repro  # noqa: F401
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serve.loadgen import (
+    SLO,
+    phase_stats,
+    poisson_requests,
+    search_max_qps,
+)
+from repro.serve.offline import OfflineInference
+
+
+def _phase(ttft_p99=0.1, lat_p99=0.5, wall=10.0, span=9.0):
+    return {
+        "ttft_s": {"p99": ttft_p99},
+        "latency_s": {"p99": lat_p99},
+        "wall_s": wall,
+        "arrival_span_s": span,
+    }
+
+
+def test_slo_clauses_fire_independently():
+    slo = SLO(ttft_p99_s=0.2, latency_p99_s=1.0, min_sustained_ratio=0.95)
+    assert slo.check(_phase()) == []
+    assert "ttft_p99" in slo.check(_phase(ttft_p99=0.3))[0]
+    assert "latency_p99" in slo.check(_phase(lat_p99=1.5))[0]
+    # saturation: wall beyond (span + latency budget) / ratio
+    allowed = (9.0 + 1.0) / 0.95
+    assert slo.check(_phase(wall=allowed + 0.1)) != []
+    assert slo.check(_phase(wall=allowed - 0.1)) == []
+    # small phase, big drain tail: the latency-budget compensation keeps
+    # a keeping-up system passing even when wall >> arrival span
+    assert slo.check(_phase(wall=0.9, span=0.1)) == []
+
+
+def test_poisson_requests_shape():
+    rng = np.random.default_rng(0)
+    reqs = poisson_requests(32, 4.0, rng, vocab=100, prompt_mean=8,
+                            max_new=8, cache_len=32, rid0=500)
+    assert [r.rid for r in reqs] == list(range(500, 532))
+    arr = [r.arrival for r in reqs]
+    assert arr == sorted(arr) and arr[0] > 0
+    for r in reqs:
+        assert 1 <= len(r.prompt) <= 32 - 8  # plen+max_new <= cache_len
+        assert r.eos == -1
+    with pytest.raises(ValueError):
+        poisson_requests(1, 0.0, rng, vocab=10, prompt_mean=4,
+                         max_new=4, cache_len=32)
+
+
+class _ModelHarness:
+    """Deterministic queueing stub with capacity C requests/s: the wall
+    is the arrival span plus the service backlog; per-request tails grow
+    once offered exceeds capacity.  Duck-types ``OfflineInference.run``
+    for the search (which only reads the report dict)."""
+
+    def __init__(self, capacity_qps):
+        self.c = capacity_qps
+
+    def run(self, reqs):
+        n = len(reqs)
+        span = max(r.arrival for r in reqs)
+        offered = n / span
+        service = n / self.c
+        wall = max(span, service) + 1.0 / self.c
+        backlog = max(0.0, service - span)
+        ttft = 0.01 + backlog / n
+        lat = 0.05 + backlog
+        return {
+            "requests": n,
+            "wall_s": wall,
+            "arrival_span_s": span,
+            "tok_per_s": n * 8 / wall,
+            "ttft_s": {"n": n, "mean": ttft, "p50": ttft, "p95": ttft,
+                       "p99": ttft},
+            "latency_s": {"n": n, "mean": lat, "p50": lat, "p95": lat,
+                          "p99": lat},
+            "retrace_free": True,
+        }
+
+
+def _mk(n, qps, rng=np.random.default_rng(7)):
+    return poisson_requests(n, qps, rng, vocab=100, prompt_mean=8,
+                            max_new=8, cache_len=32)
+
+
+def test_search_converges_on_modeled_capacity():
+    slo = SLO(ttft_p99_s=0.5, latency_p99_s=1.0, min_sustained_ratio=0.95)
+    out = search_max_qps(_ModelHarness(capacity_qps=10.0), _mk, slo,
+                         qps_lo=1.0, qps_hi=100.0, iters=6,
+                         phase_requests=64)
+    assert out["slo_pass"]
+    # capacity 10 qps: the knee must land near it, strictly inside the
+    # bracket, and the attested phase is a MEASURED pass
+    assert 5.0 < out["max_qps"] < 25.0
+    at = out["attestation"]
+    assert at["slo_pass"] and at["offered_qps"] == out["max_qps"]
+    passing = [p for p in out["phases"] if p["slo_pass"]]
+    assert any(p["offered_qps"] == at["offered_qps"] and
+               p["sustained_qps"] == at["sustained_qps"] for p in passing)
+    # phase transcript: lo probe + hi probe + iters bisections
+    assert len(out["phases"]) == 2 + 6
+
+
+def test_search_floor_fail_and_ceiling_pass():
+    slo = SLO(ttft_p99_s=0.5, latency_p99_s=1.0)
+    slow = _ModelHarness(capacity_qps=0.05)
+    out = search_max_qps(slow, _mk, slo, qps_lo=1.0, qps_hi=10.0, iters=3)
+    assert not out["slo_pass"] and out["max_qps"] == 0.0
+    assert "floor" in out["note"] and "attestation" not in out
+
+    fast = _ModelHarness(capacity_qps=1e6)
+    out = search_max_qps(fast, _mk, slo, qps_lo=1.0, qps_hi=10.0, iters=3)
+    assert out["slo_pass"] and out["max_qps"] == 10.0
+    assert "ceiling" in out["note"]
+    assert len(out["phases"]) == 2  # both probes, no bisection needed
+
+
+def test_search_rejects_bad_bracket():
+    slo = SLO()
+    with pytest.raises(ValueError):
+        search_max_qps(_ModelHarness(1.0), _mk, slo, qps_lo=5.0,
+                       qps_hi=5.0)
+    with pytest.raises(ValueError):
+        search_max_qps(_ModelHarness(1.0), _mk, slo, qps_lo=1.0,
+                       qps_hi=2.0, iters=-1)
+
+
+def test_real_phase_meets_generous_slo():
+    cfg = get_config("gemma-2b").smoke()
+    params = init_params(cfg, jax.random.key(0))
+    harness = OfflineInference(cfg, params, n_slots=4, cache_len=32,
+                               prefill_chunk=8, buckets=(8, 16, 32),
+                               queue_size=8)
+    harness.warmup()
+    rng = np.random.default_rng(11)
+    reqs = poisson_requests(8, 50.0, rng, vocab=cfg.vocab, prompt_mean=8,
+                            max_new=4, cache_len=32)
+    ph = phase_stats(harness.run(reqs), offered_qps=50.0)
+    harness.require_steady_state()
+    assert ph["requests"] == 8 and ph["retrace_free"]
+    assert ph["sustained_qps"] > 0
+    # generous SLO: a smoke model on any host finishes 8 tiny requests
+    # well inside a 60s budget
+    assert SLO(ttft_p99_s=60.0, latency_p99_s=60.0,
+               min_sustained_ratio=0.5).check(ph) == []
