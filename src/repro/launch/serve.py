@@ -357,6 +357,8 @@ def _offline_main(args, ap, cfg, params, reqs, crypto_ctx, rng,
             prefill_chunk=args.prefill_chunk, buckets=buckets,
             replicas=args.replicas, overlap=args.overlap,
             queue_size=args.queue_size, rns_verify=args.rns_verify,
+            page_size=args.page_size, n_pages=args.pages,
+            prefix_share=args.prefix_share,
             crypto_slots=args.crypto_slots, crypto_ctx=crypto_ctx,
             crypto_chunk=args.crypto_chunk,
         )
@@ -507,7 +509,8 @@ def main(argv=None) -> dict:
                     help="offline prefill buckets: 'pow2' (power-of-two "
                          "ladder up to cache-len, the default), 'none' "
                          "(chunked prefill), or a comma list like "
-                         "'32,64,128'")
+                         "'32,64,128'; composes with --page-size (padded "
+                         "write barrier through the page table)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="data-parallel engine replicas behind one shared "
                          "admission queue (offline/loadgen)")
@@ -548,14 +551,15 @@ def main(argv=None) -> dict:
                  "prefix sharing (the persisted state IS the retained "
                  "pages plus their RRNS fingerprints)")
     if args.mode != "sim":
+        # --page-size composes with --buckets here (the padded write
+        # barrier, DESIGN.md §13); only the sim-flavored extras stay out
         bad = [f for f, v in (
-            ("--page-size", args.page_size is not None),
             ("--warm-restart", bool(args.warm_restart)),
             ("--inject-wire-corrupt", args.inject_wire_corrupt),
         ) if v]
         if bad:
-            ap.error(f"--mode {args.mode} drives the monolithic wall-clock "
-                     f"harness; drop {', '.join(bad)}")
+            ap.error(f"--mode {args.mode} drives the wall-clock harness; "
+                     f"drop {', '.join(bad)}")
     if args.mode == "loadgen" and (args.trace or args.crypto_requests
                                    or args.crypto_slots):
         ap.error("--mode loadgen synthesizes its own Poisson LLM phases; "

@@ -500,7 +500,7 @@ def attn_decode(
 
 def attn_decode_paged(
     p, x, k_pool, v_pool, pages, pos, *, page_size, heads, kv, hd, theta,
-    window=None,
+    window=None, valid_len=None, scratch=None,
 ):
     """Cached decode through a page-table indirection (DESIGN.md §13).
 
@@ -522,6 +522,21 @@ def attn_decode_paged(
     hides unwritten cache zeros, so outputs are bitwise-identical to the
     un-paged path.  No ring/quant/cross-attention support (the serve
     engine lowers or gates those before reaching here).
+
+    ``valid_len``/``scratch`` (both traced int32 DATA, so one graph per
+    token-shape still serves every call) implement the padded write
+    barrier for bucketed prefill: per row, only the first ``valid_len``
+    of the s tokens write through the page table — the rest scatter into
+    the row's ``scratch`` page, a throwaway physical page the caller
+    frees right after the call.  Pad K/V never lands in a shared,
+    registered, or retained page, so CoW/fingerprint invariants hold
+    without inspecting pad content.  Pad positions may also run past the
+    logical row (start+s > n_pg*page_size); their table lookup is clipped
+    in-bounds and then discarded by the same mask.  Pad QUERIES still
+    attend (their outputs are junk) — the caller's ``logit_index`` reads
+    the last real position, and causal masking keeps real queries from
+    ever seeing a pad key, because pad keys only exist in the scratch
+    page which no table row names.
     """
     dt = x.dtype
     b, s, _ = x.shape
@@ -535,8 +550,17 @@ def attn_decode_paged(
     q = rope(q, positions, theta)
     k_new = rope(k_new, positions, theta)
     # scatter each new token to its (physical page, in-page offset)
-    pid = jnp.take_along_axis(pages, positions // page_size, axis=1)  # (b,s)
+    n_pg_tab = pages.shape[1]
+    lp = jnp.clip(positions // page_size, 0, n_pg_tab - 1)  # pads may be OOB
+    pid = jnp.take_along_axis(pages, lp, axis=1)  # (b,s)
     off = positions % page_size
+    if valid_len is not None:
+        # padded write barrier: pad rows (i >= valid_len) scatter into the
+        # per-row scratch page instead of through the table
+        keep = jnp.arange(s)[None, :] < jnp.reshape(
+            jnp.asarray(valid_len, jnp.int32), (-1, 1))
+        pid = jnp.where(keep, pid, jnp.reshape(
+            jnp.asarray(scratch, jnp.int32), (-1, 1)))
     k_pool = k_pool.at[pid, off].set(k_new.astype(k_pool.dtype))
     v_pool = v_pool.at[pid, off].set(v_new.astype(v_pool.dtype))
     n_pg = pages.shape[1]

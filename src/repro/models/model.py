@@ -86,7 +86,8 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos,
 
 
 def extend_step(cfg: ModelConfig, params, cache, tokens, pos,
-                logit_index=None, pages=None, page_size=None):
+                logit_index=None, pages=None, page_size=None,
+                valid_len=None, scratch=None):
     """Append a token chunk (b, C) at positions pos..pos+C-1 to a linear
     KV cache; returns (logits over all C positions — or just position
     ``logit_index`` when given — and the cache).  Text-only linear-cache
@@ -94,11 +95,15 @@ def extend_step(cfg: ModelConfig, params, cache, tokens, pos,
     chunk-extendable through this API, and vlm is excluded because its
     cache layout reserves positions 0..n_patches-1 for the patch prefix
     that only a full prefill can place.  ``pages``/``page_size`` route
-    the chunk through the paged pool layout (DESIGN.md §13)."""
+    the chunk through the paged pool layout (DESIGN.md §13);
+    ``valid_len``/``scratch`` (paged only) are the padded write barrier —
+    per-row pad tokens past ``valid_len`` scatter into the throwaway
+    ``scratch`` page instead of through the table."""
     if cfg.family in ("dense", "moe"):
         return transformer.decoder_only_extend(
             cfg, params, cache, tokens, pos, logit_index=logit_index,
-            pages=pages, page_size=page_size,
+            pages=pages, page_size=page_size, valid_len=valid_len,
+            scratch=scratch,
         )
     raise NotImplementedError(
         f"extend_step supports text-only linear-KV transformer families "

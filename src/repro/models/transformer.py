@@ -346,7 +346,7 @@ def _linear_cache_stack(cfg: ModelConfig, params, cache, x, pos):
 
 
 def _paged_cache_stack(cfg: ModelConfig, params, pool, pages, x, pos,
-                       page_size: int):
+                       page_size: int, valid_len=None, scratch=None):
     """Scanned layer stack over the PAGED KV pool (DESIGN.md §13).
 
     pool: {"k","v"}: (L, P, page_size, g, hd) — one pooled buffer of
@@ -367,7 +367,7 @@ def _paged_cache_stack(cfg: ModelConfig, params, pool, pages, x, pos,
         h = rms_norm(x, pl["ln1"], cfg.norm_eps)
         o, kc, vc = attn_decode_paged(
             pl["attn"], h, kc, vc, pages, pos, page_size=page_size,
-            window=wv, **akw,
+            window=wv, valid_len=valid_len, scratch=scratch, **akw,
         )
         x = x + o
         h2 = rms_norm(x, pl["ln2"], cfg.norm_eps)
@@ -409,7 +409,8 @@ def decoder_only_decode(cfg: ModelConfig, params, cache, tokens, pos,
 
 
 def decoder_only_extend(cfg: ModelConfig, params, cache, tokens, pos,
-                        logit_index=None, pages=None, page_size=None):
+                        logit_index=None, pages=None, page_size=None,
+                        valid_len=None, scratch=None):
     """Chunked prefill-extend: append a CHUNK of tokens to a linear cache.
 
     tokens: (b, C) land at positions pos..pos+C-1 (pos scalar or per-row
@@ -423,7 +424,10 @@ def decoder_only_extend(cfg: ModelConfig, params, cache, tokens, pos,
     used; DESIGN.md §12).  Ring (grouped sliding-window) caches are not
     supported; serve lowers such archs to the masked linear-cache layout.
     With ``pages``/``page_size`` the chunk lands in a paged pool through
-    the page-table indirection instead (DESIGN.md §13).
+    the page-table indirection instead (DESIGN.md §13); ``valid_len``/
+    ``scratch`` (paged only) route per-row pad tokens past ``valid_len``
+    into a throwaway scratch page instead of through the table — the
+    padded write barrier for bucketed prefill over the pool.
     """
     if "lk" in cache:
         raise NotImplementedError(
@@ -434,8 +438,11 @@ def decoder_only_extend(cfg: ModelConfig, params, cache, tokens, pos,
     x = embed(tokens, params["embed"], dt)
     if pages is not None:
         x, kc, vc = _paged_cache_stack(cfg, params, cache, pages, x, pos,
-                                       page_size)
+                                       page_size, valid_len=valid_len,
+                                       scratch=scratch)
     else:
+        assert valid_len is None and scratch is None, \
+            "the padded write barrier is a paged-pool construct"
         x, kc, vc = _linear_cache_stack(cfg, params, cache, x, pos)
     if logit_index is not None:
         x = jax.lax.dynamic_index_in_dim(x, logit_index, axis=1,

@@ -106,15 +106,19 @@ class ContinuousBatcher:
         ``len(prompt) + max_new <= cache_len``.
     prefill_chunk : token-chunk size of the admission prefill loop — long
         prompts run as ceil(plen/chunk) calls of ONE fixed-shape graph.
-    prefill_buckets : optional ascending tuple of prompt-length buckets
-        (monolithic path only).  Admission pads the prompt to the
-        smallest bucket >= plen and runs ONE extend call per prompt
-        instead of the chunk loop — one compiled graph per bucket width,
-        pre-compiled by the offline harness's warmup.  Prompts longer
-        than the largest bucket fall back to the chunked loop (counted
-        in ``bucket_stats()``).  Bitwise-identical to chunked prefill:
-        pad positions beyond plen are causally invisible and later
-        overwritten by decode writes.
+    prefill_buckets : optional ascending tuple of prompt-length buckets.
+        Admission pads the prompt to the smallest bucket >= plen and
+        runs ONE extend call per prompt instead of the chunk loop — one
+        compiled graph per bucket width, pre-compiled by the offline
+        harness's warmup.  Prompts longer than the largest bucket fall
+        back to the chunked loop (counted in ``bucket_stats()``).
+        Bitwise-identical to chunked prefill: pad positions beyond plen
+        are causally invisible and later overwritten by decode writes.
+        Composes with ``page_size``: on the paged pool the bucket is
+        chosen by the tokens LEFT to compute after the shared-prefix
+        skip, real tokens write through the ordinary page-table barrier,
+        and pad tokens scatter into a per-call scratch page that is
+        freed immediately — the padded write barrier of DESIGN.md §13.
     rns_verify : arm the RnsArray cache-integrity fingerprints.
     mesh : optional ``jax.sharding.Mesh``; the batched cache is placed on
         ``dist.sharding.cache_specs``' layout over it.
@@ -189,13 +193,6 @@ class ContinuousBatcher:
 
         self.prefill_buckets: tuple[int, ...] | None = None
         if prefill_buckets is not None:
-            if self.paged:
-                raise NotImplementedError(
-                    "prefill_buckets pads straight into the solo cache + "
-                    "insert splice; the paged pool prefills through the "
-                    "page table per chunk — bucket it after the pool "
-                    "grows a padded write barrier"
-                )
             bks = tuple(sorted({int(b) for b in prefill_buckets}))
             if not bks:
                 raise ValueError("prefill_buckets must name >= 1 bucket")
@@ -257,6 +254,7 @@ class ContinuousBatcher:
             self.sched = PagedScheduler(
                 n_slots, cache_len, page_size=ps, n_pages=self.n_pages,
                 prefill_chunk=C, prefix_share=prefix_share,
+                prefill_buckets=self.prefill_buckets,
             )
         else:
             self.sched = SlotScheduler(n_slots, cache_len)
@@ -291,10 +289,16 @@ class ContinuousBatcher:
         # are data, never trace constants).
         if self.paged:
             psz = self.page_size
+            # valid/scratch are traced int32 DATA (the padded write
+            # barrier): the chunk loop passes valid = chunk width (all
+            # tokens through the table — chunk-grid pads included, same
+            # as ever) with the parking page as a dead scratch operand;
+            # bucketed prefill passes valid = real tokens + a live
+            # scratch page.  Either way one graph per token width.
             self._extend_fn = jax.jit(
-                lambda p, c, t, pos, idx, pg: extend_step(
+                lambda p, c, t, pos, idx, pg, valid, scr: extend_step(
                     cfg, p, c, t, pos, logit_index=idx,
-                    pages=pg, page_size=psz,
+                    pages=pg, page_size=psz, valid_len=valid, scratch=scr,
                 )
             )
             self._decode_fn = jax.jit(self._decode_paged_impl)
@@ -564,9 +568,14 @@ class ContinuousBatcher:
             self.bucket_pad_tokens += bucket - plen
             self.bucket_real_tokens += plen
         else:
-            if self.prefill_buckets is not None:
-                self.bucket_fallbacks += 1
             n_chunks = -(-plen // C)
+            if self.prefill_buckets is not None:
+                # fallback traffic stays in the ledger: its chunk-grid
+                # pads and real tokens count like a bucket's would, so
+                # pad_overhead reflects ALL prefill traffic
+                self.bucket_fallbacks += 1
+                self.bucket_pad_tokens += n_chunks * C - plen
+                self.bucket_real_tokens += plen
             prompt = prompt + [0] * (n_chunks * C - plen)
             last = (plen - 1) - (n_chunks - 1) * C
             for ci in range(n_chunks):
@@ -604,26 +613,64 @@ class ContinuousBatcher:
         ``slot.prefill_start`` are NOT recomputed — the scheduler mapped
         registry pages holding that shared prefix at admission; each
         chunk's write barrier (``plan_write``) allocates/CoWs the pages
-        the chunk lands on before its extend runs."""
+        the chunk lands on before its extend runs.
+
+        With a bucket ladder, a prompt whose remaining extend fits a
+        bucket prefills in ONE padded call through the padded write
+        barrier (DESIGN.md §13): the real span goes through the normal
+        page-table barrier, while every pad token scatters into a
+        one-call scratch page taken from the slot's reservation — pad
+        K/V never lands in a shared, registered, or retained page, so
+        dedup/CoW/fingerprints see exactly the rows the chunk loop
+        would have written."""
         req = slot.req
         prompt = [int(t) for t in req.prompt]
         plen, C = len(prompt), self.prefill_chunk
         start = slot.prefill_start
-        n_chunks = -(-(plen - start) // C)
-        padded = prompt + [0] * (start + n_chunks * C - plen)
-        last = (plen - 1) - (start + (n_chunks - 1) * C)
-        for ci in range(n_chunks):
-            s0 = start + ci * C
-            self._exec_actions(self.sched.plan_write(slot, s0, C))
+        need = plen - start  # tokens the extend actually computes
+        bucket = self.sched.bucket_for(need)
+        if bucket is not None:
+            self._exec_actions(self.sched.plan_write(slot, start, need))
+            scratch, acts = self.sched.alloc_scratch(slot)
+            self._exec_actions(acts)
             pages_row = jnp.asarray(
                 [self.sched.table[slot.index]], jnp.int32
             )
-            toks = jnp.asarray([padded[s0:s0 + C]], jnp.int32)
-            idx = last if ci == n_chunks - 1 else 0
-            logits, self.cache = self._extend_fn(
-                self.params, self.cache, toks, jnp.int32(s0),
-                jnp.int32(idx), pages_row,
+            toks = jnp.asarray(
+                [prompt[start:] + [0] * (bucket - need)], jnp.int32
             )
+            logits, self.cache = self._extend_fn(
+                self.params, self.cache, toks, jnp.int32(start),
+                jnp.int32(need - 1), pages_row, jnp.int32(need),
+                jnp.int32(scratch),
+            )
+            self.sched.free_scratch(scratch)
+            self.bucket_hits[bucket] += 1
+            self.bucket_pad_tokens += bucket - need
+            self.bucket_real_tokens += need
+        else:
+            n_chunks = -(-need // C)
+            if self.prefill_buckets is not None:
+                self.bucket_fallbacks += 1
+                self.bucket_pad_tokens += n_chunks * C - need
+                self.bucket_real_tokens += need
+            padded = prompt + [0] * (start + n_chunks * C - plen)
+            last = (plen - 1) - (start + (n_chunks - 1) * C)
+            for ci in range(n_chunks):
+                s0 = start + ci * C
+                self._exec_actions(self.sched.plan_write(slot, s0, C))
+                pages_row = jnp.asarray(
+                    [self.sched.table[slot.index]], jnp.int32
+                )
+                toks = jnp.asarray([padded[s0:s0 + C]], jnp.int32)
+                idx = last if ci == n_chunks - 1 else 0
+                # chunk-grid pads keep writing THROUGH the table (their
+                # pages are reserved for this slot's decode span anyway):
+                # valid = full width, parking page as dead scratch operand
+                logits, self.cache = self._extend_fn(
+                    self.params, self.cache, toks, jnp.int32(s0),
+                    jnp.int32(idx), pages_row, jnp.int32(C), jnp.int32(0),
+                )
         first = int(jnp.argmax(logits[0, 0]))
         # publish fully-covered prompt pages for later admissions to share
         self.sched.register_prompt(slot, prompt)
@@ -902,7 +949,12 @@ class ContinuousBatcher:
     def bucket_stats(self) -> dict:
         """Bucketed-prefill accounting: hits per width, chunk-loop
         fallbacks, and pad overhead (pad tokens / real tokens) — the
-        ``buckets`` block of the offline harness report."""
+        ``buckets`` block of the offline harness report.  Fallback
+        prompts count too (their chunk-grid pads and real tokens), so
+        ``pad_overhead`` covers ALL prefill traffic, not only the
+        bucketed slice.  On the paged engine "real" means the tokens the
+        extend computed — a shared prefix mapped from the registry is
+        neither padded nor recomputed, so it appears in neither term."""
         if self.prefill_buckets is None:
             raise RuntimeError("engine built without prefill_buckets=")
         real = self.bucket_real_tokens

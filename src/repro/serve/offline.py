@@ -364,7 +364,10 @@ class OfflineInference:
     ``ContinuousBatcher``; ``buckets`` arms length-bucketed single-call
     prefill, ``overlap`` routes completions through a
     ``CompletionPump`` instead of running the callback inline on the
-    driver thread.
+    driver thread.  ``page_size`` puts every replica on the paged,
+    prefix-sharing pool — buckets compose with it through the padded
+    write barrier (DESIGN.md §13), and warmup additionally pre-compiles
+    the copy-on-write graph so steady state stays retrace-free.
     """
 
     def __init__(self, cfg, params, *, n_slots: int, cache_len: int,
@@ -375,6 +378,8 @@ class OfflineInference:
                  queue_size: int = 64,
                  callback=None,
                  rns_verify: bool = False,
+                 page_size: int | None = None, n_pages: int | None = None,
+                 prefix_share: bool = True,
                  crypto_slots: int = 0, crypto_ctx=None,
                  crypto_chunk: int = 8):
         from repro.serve.batcher import ContinuousBatcher
@@ -385,6 +390,8 @@ class OfflineInference:
                 cfg, params, n_slots=n_slots, cache_len=cache_len,
                 prefill_chunk=prefill_chunk, prefill_buckets=buckets,
                 rns_verify=rns_verify, mesh=mesh,
+                page_size=page_size, n_pages=n_pages,
+                prefix_share=prefix_share,
                 crypto_slots=crypto_slots, crypto_ctx=crypto_ctx,
                 crypto_chunk=crypto_chunk,
             )
@@ -432,16 +439,35 @@ class OfflineInference:
         ``require_steady_state`` holds ``run()`` to.  Warmup requests
         use negative rids (real traffic uses non-negative) and are
         drained, not reported."""
+        from repro.serve.scheduler import Request
+
         for ei, eng in enumerate(self.engines):
             rid = -(1 + 1000 * ei)  # unique negative ids per replica
-            for plen in self._warm_llm_plens():
-                from repro.serve.scheduler import Request
-
+            for wi, plen in enumerate(self._warm_llm_plens()):
                 # max_new=2 reaches the decode graph (1 would retire at
-                # start_decode, before any batched step compiles)
-                eng.submit(Request(rid=rid, prompt=[1] * plen, max_new=2,
+                # start_decode, before any batched step compiles).  One
+                # DISTINCT token per warmup prompt: on the paged pool an
+                # earlier warmup registers its prompt pages, and a
+                # repeated token would prefix-hit — shrinking the next
+                # prompt's real extend and silently skipping the bucket
+                # width it was meant to compile.
+                tok = 3 + wi % (eng.cfg.vocab - 3)
+                eng.submit(Request(rid=rid, prompt=[tok] * plen, max_new=2,
                                    eos=-1))
                 rid -= 1
+            if (eng.paged and eng.sched.registry is not None
+                    and eng.prefill_chunk < eng.page_size
+                    and eng.page_size + 2 <= self.cache_len):
+                # pre-compile the copy-on-write graph: a full-prefix
+                # re-admission of a one-page prompt re-writes the shared
+                # tail inside the registered page (chunk-grained restart
+                # below the page boundary), which is exactly the CoW the
+                # first timed prefix hit would otherwise compile
+                dup = [2] * eng.page_size
+                for _ in range(2):
+                    eng.submit(Request(rid=rid, prompt=dup, max_new=2,
+                                       eos=-1))
+                    rid -= 1
             if eng.crypto is not None:
                 from repro.serve.crypto import CryptoRequest
 
@@ -603,4 +629,6 @@ class OfflineInference:
                 if agg["real_tokens"] else 0.0
             )
             report["buckets"] = agg
+        if self.engines[0].paged:
+            report["paging"] = [e.page_stats() for e in self.engines]
         return report

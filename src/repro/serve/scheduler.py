@@ -468,12 +468,18 @@ class PagedScheduler(SlotScheduler):
 
     def __init__(self, n_slots: int, cache_len: int, *, page_size: int,
                  n_pages: int, prefill_chunk: int,
-                 prefix_share: bool = True):
+                 prefix_share: bool = True, prefill_buckets=None):
         super().__init__(n_slots, cache_len)
         assert cache_len % page_size == 0
         self.page_size = page_size
         self.n_pg = cache_len // page_size
         self.prefill_chunk = prefill_chunk
+        # the engine's (validated, sorted) bucket ladder, or None: the
+        # scheduler must reserve by the SAME bucketed-vs-chunk rule the
+        # engine dispatches by, or admission gating and the write barrier
+        # disagree about the scratch page
+        self.prefill_buckets = (tuple(prefill_buckets)
+                                if prefill_buckets else None)
         # numpy-free on purpose: plain host ints; the engine snapshots the
         # table into a device array each step (data, never a trace const)
         self.table = [[0] * self.n_pg for _ in range(n_slots)]
@@ -488,12 +494,28 @@ class PagedScheduler(SlotScheduler):
                 if pid != 0]
 
     # ---------------------------------------------------------- admission
+    def bucket_for(self, n: int):
+        """Smallest configured bucket covering an ``n``-token extend, or
+        None (no ladder / over-bucket fallback to the chunk loop)."""
+        if self.prefill_buckets is None:
+            return None
+        for b in self.prefill_buckets:
+            if b >= n:
+                return b
+        return None
+
     def _plan_admission(self, prompt: list, max_new: int):
         """Pure planning for the queue head: (pages to map from the
         registry, first position prefill must compute, worst-case pages to
         reserve).  ``prefill_start`` is chunk-aligned and always leaves at
         least the last prompt position to recompute, so first-token logits
-        exist even on a full-prefix hit."""
+        exist even on a full-prefix hit.
+
+        Reservation sizing is path-dependent (DESIGN.md §13): the chunk
+        loop writes its chunk-grid pads THROUGH the table, so it reserves
+        up to ``pad_end``; the bucketed path routes every pad into a
+        scratch page instead, so it reserves only the real span PLUS one
+        page for the scratch itself."""
         ps, C = self.page_size, self.prefill_chunk
         plen = len(prompt)
         matched = self.registry.match(prompt) if self.registry else []
@@ -502,9 +524,13 @@ class PagedScheduler(SlotScheduler):
         # pages that provide content below prefill_start are worth mapping;
         # anything fully recomputed is cheaper to fill fresh than to copy
         m_map = min(len(matched), -(-prefill_start // ps))
-        pad_end = prefill_start + -(-(plen - prefill_start) // C) * C
-        span_end = max(plen + max_new - 1, pad_end)
-        n_reserve = -(-span_end // ps) - prefill_start // ps
+        if self.bucket_for(plen - prefill_start) is not None:
+            span_end = plen + max_new - 1
+            n_reserve = -(-span_end // ps) - prefill_start // ps + 1
+        else:
+            pad_end = prefill_start + -(-(plen - prefill_start) // C) * C
+            span_end = max(plen + max_new - 1, pad_end)
+            n_reserve = -(-span_end // ps) - prefill_start // ps
         return matched[:m_map], prefill_start, n_reserve
 
     def admit_next(self, now: float = 0.0) -> Slot | None:
@@ -593,6 +619,24 @@ class PagedScheduler(SlotScheduler):
                                 "dst": new})
                 self.stats["cow_copies"] += 1
         return actions
+
+    def alloc_scratch(self, slot: Slot) -> tuple[int, list[dict]]:
+        """Take one page from ``slot``'s reservation as the pad sink for a
+        bucketed prefill call.  The scratch page is NEVER entered in the
+        table, never registered, and never fingerprinted — it exists only
+        so the padded write barrier has a physical page to absorb pad
+        scatters (DESIGN.md §13).  May evict a retained page (the returned
+        actions must be executed before the extend call).  The caller MUST
+        ``free_scratch`` it right after the extend lands."""
+        actions: list[dict] = []
+        pid = self._alloc_for(slot, actions)
+        return pid, actions
+
+    def free_scratch(self, pid: int) -> None:
+        """Return a scratch page to the free list.  Its pad content is
+        garbage by construction; it must not be retained (a retained page
+        is shareable, and scratch content must never become shareable)."""
+        self.alloc.deref(pid, retain=False)
 
     # ------------------------------------------------------- registration
     def register_prompt(self, slot: Slot, prompt: list) -> None:

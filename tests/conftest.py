@@ -1,13 +1,123 @@
-"""Shared test configuration.
+"""Shared test configuration and serve-engine fixtures.
 
 Puts ``src/`` on sys.path so a bare ``pytest`` works without PYTHONPATH, and
 documents the optional dev dependency policy: suites that use hypothesis
 guard their own import with ``pytest.importorskip`` so a missing optional
 dependency reports as an explicit SKIP, never a collection ERROR.
+
+The serve suites (``test_serve_batcher``/``test_serve_paged``/
+``test_serve_offline``/``test_serve_soak``) share one smoke model and one
+engine factory from here instead of keeping per-file copies: ``cfg``/
+``params`` are session-scoped fixtures, and ``make_engine`` builds a
+``ContinuousBatcher`` parameterized over paged/monolithic x bucketed/
+chunked.  ``kv_row``/``logical_rows`` read a request's written KV span
+back out of either cache layout for bitwise comparisons.
 """
 import os
 import sys
 
+import pytest
+
 _SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
+
+# one geometry for every serve suite: 4 pages per slot, page == chunk
+CACHE_LEN = 32
+CHUNK = 8
+PAGE = 8
+N_PG = CACHE_LEN // PAGE
+
+
+@pytest.fixture(scope="session")
+def cfg():
+    from repro.configs import get_config
+
+    return get_config("gemma-2b").smoke()
+
+
+@pytest.fixture(scope="session")
+def params(cfg):
+    import jax
+
+    from repro.models import init_params
+
+    return init_params(cfg, jax.random.key(0))
+
+
+def make_engine(cfg, params, *, paged=False, buckets=None, **kw):
+    """Engine factory over the shared serve geometry.  ``paged=True``
+    switches to the paged pool (page_size=PAGE unless overridden);
+    ``buckets`` arms length-bucketed prefill — on the paged family that
+    exercises the padded write barrier (DESIGN.md §13)."""
+    from repro.serve.batcher import ContinuousBatcher
+
+    kw.setdefault("n_slots", 3)
+    kw.setdefault("cache_len", CACHE_LEN)
+    kw.setdefault("prefill_chunk", CHUNK)
+    if paged:
+        kw.setdefault("page_size", PAGE)
+    if buckets is not None:
+        kw.setdefault("prefill_buckets", buckets)
+    return ContinuousBatcher(cfg, params, **kw)
+
+
+def kv_row(engine, slot_index, plen, n_out):
+    """A request's monolithic KV row over its full written span
+    [0, plen+n_out-1) (idle-row junk writes park at cache_len-1, outside
+    every span)."""
+    import numpy as np
+
+    end = plen + n_out - 1  # last written position + 1
+    k = np.asarray(engine.cache["k"])[:, slot_index, :end]
+    v = np.asarray(engine.cache["v"])[:, slot_index, :end]
+    return k, v
+
+
+def run_with_row_snapshots(eng, reqs):
+    """Submit ``reqs``, run to completion, and capture every LLM
+    request's written KV span [0, plen+n_out-1) AT RETIREMENT — the one
+    moment the span is complete and (on the paged pool) the slot's
+    page-table row is still mapped.  Works on both cache layouts, so a
+    paged+bucketed engine and a monolithic chunk-loop engine can be
+    compared request-by-request even under slot churn and page reuse.
+    Returns ({rid: retired Request}, {rid: (k_rows, v_rows)})."""
+    rows = {}
+    orig = eng.sched.record_token
+
+    def spy(slot, token, now=0.0):
+        req, idx = slot.req, slot.index
+        done = orig(slot, token, now)
+        if done:
+            plen, n_out = len(req.prompt), len(req.out)
+            end = plen + n_out - 1  # last written position + 1
+            if eng.paged:
+                r = logical_rows(eng, eng.sched.table[idx])
+                rows[req.rid] = (r["k"][:, :end].copy(),
+                                 r["v"][:, :end].copy())
+            else:
+                rows[req.rid] = kv_row(eng, idx, plen, n_out)
+        return done
+
+    eng.sched.record_token = spy
+    try:
+        for r in reqs:
+            eng.submit(r)
+        done = eng.run_to_completion()
+    finally:
+        eng.sched.record_token = orig
+    return {r.rid: r for r in done}, rows
+
+
+def logical_rows(eng, table_row):
+    """Gather one slot's logical (L, cache_len, g, hd) K/V rows out of the
+    paged pool through a page-table row snapshot."""
+    import numpy as np
+
+    pages = np.asarray(table_row)
+    rows = {}
+    for name in ("k", "v"):
+        pool = np.asarray(eng.cache[name])  # (L, P, page, g, hd)
+        L, _, page, g, hd = pool.shape
+        rows[name] = pool[:, pages].reshape(L, len(pages) * page, g, hd)
+    return rows

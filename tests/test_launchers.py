@@ -126,8 +126,14 @@ def test_serve_driver_loadgen_mode(tmp_path):
 def test_serve_driver_mode_flag_validation():
     from repro.launch.serve import main as serve_main
 
+    # --page-size composes with offline/loadgen now (padded write
+    # barrier); the sim-only extras still do not
     with pytest.raises(SystemExit):
-        serve_main(["--mode", "offline", "--page-size", "8"])
+        serve_main(["--mode", "offline", "--page-size", "8",
+                    "--rns-verify", "--warm-restart", "/tmp/nope"])
+    with pytest.raises(SystemExit):
+        serve_main(["--mode", "offline", "--rns-verify",
+                    "--inject-wire-corrupt"])
     with pytest.raises(SystemExit):
         serve_main(["--mode", "loadgen", "--crypto-slots", "1"])
     with pytest.raises(SystemExit):

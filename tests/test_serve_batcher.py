@@ -21,23 +21,11 @@ import pytest
 import jax
 
 import repro  # noqa: F401
+from conftest import CACHE_LEN, CHUNK, kv_row as _row, make_engine
 from repro.configs import get_config
 from repro.models import init_params
 from repro.serve.batcher import ContinuousBatcher
 from repro.serve.scheduler import Request, SlotScheduler
-
-CACHE_LEN = 32
-CHUNK = 8
-
-
-@pytest.fixture(scope="module")
-def cfg():
-    return get_config("gemma-2b").smoke()
-
-
-@pytest.fixture(scope="module")
-def params(cfg):
-    return init_params(cfg, jax.random.key(0))
 
 
 def _requests(cfg, seed=0):
@@ -51,20 +39,7 @@ def _requests(cfg, seed=0):
     return [mk(0, 5, 8), mk(1, 11, 7), mk(2, 3, 9)]
 
 
-def _engine(cfg, params, **kw):
-    kw.setdefault("n_slots", 3)
-    kw.setdefault("cache_len", CACHE_LEN)
-    kw.setdefault("prefill_chunk", CHUNK)
-    return ContinuousBatcher(cfg, params, **kw)
-
-
-def _row(engine, slot_index, plen, n_out):
-    """A request's KV row over its full written span [0, plen+n_out-1)
-    (idle-row junk writes park at cache_len-1, outside every span)."""
-    end = plen + n_out - 1  # last written position + 1
-    k = np.asarray(engine.cache["k"])[:, slot_index, :end]
-    v = np.asarray(engine.cache["v"])[:, slot_index, :end]
-    return k, v
+_engine = make_engine  # shared factory (tests/conftest.py)
 
 
 def _run_mixed(cfg, params):

@@ -19,12 +19,8 @@ import time
 import numpy as np
 import pytest
 
-import jax
-
 import repro  # noqa: F401
-from repro.configs import get_config
-from repro.models import init_params
-from repro.serve.batcher import ContinuousBatcher
+from conftest import CACHE_LEN, CHUNK, kv_row as _row, make_engine
 from repro.serve.offline import (
     CompletionPump,
     OfflineInference,
@@ -35,19 +31,7 @@ from repro.serve.offline import (
 )
 from repro.serve.scheduler import Request
 
-CACHE_LEN = 32
-CHUNK = 8
 BUCKETS = (8, 16, 32)
-
-
-@pytest.fixture(scope="module")
-def cfg():
-    return get_config("gemma-2b").smoke()
-
-
-@pytest.fixture(scope="module")
-def params(cfg):
-    return init_params(cfg, jax.random.key(0))
 
 
 def _requests(cfg, seed=0, n=4):
@@ -64,16 +48,7 @@ def _requests(cfg, seed=0, n=4):
 
 def _engine(cfg, params, **kw):
     kw.setdefault("n_slots", 4)
-    kw.setdefault("cache_len", CACHE_LEN)
-    kw.setdefault("prefill_chunk", CHUNK)
-    return ContinuousBatcher(cfg, params, **kw)
-
-
-def _row(engine, slot_index, plen, n_out):
-    end = plen + n_out - 1  # last written position + 1
-    k = np.asarray(engine.cache["k"])[:, slot_index, :end]
-    v = np.asarray(engine.cache["v"])[:, slot_index, :end]
-    return k, v
+    return make_engine(cfg, params, **kw)
 
 
 # -- bucketed prefill bitwise identity ------------------------------------
@@ -141,9 +116,41 @@ def test_bucketed_identity_with_crypto_family(cfg, params):
     assert results[0][1][101] == (4321 * 8765) % 99991
 
 
+def test_bucket_stats_count_fallback_traffic(cfg, params):
+    """Over-bucket prompts fall back to the chunk loop; their chunk-grid
+    pads AND real tokens must still land in the pad-overhead accounting.
+    (Regression: fallback tokens used to vanish from both terms, so
+    ``pad_overhead`` understated pad cost and overstated the bucketed
+    share of traffic.)"""
+    rng = np.random.default_rng(5)
+    mk = lambda rid, plen: Request(
+        rid=rid, prompt=[int(t) for t in rng.integers(1, cfg.vocab, plen)],
+        max_new=2)
+    eng = _engine(cfg, params, prefill_buckets=(8,))
+    eng.submit(mk(0, 5))   # bucketed: 3 pads / 5 real
+    eng.submit(mk(1, 20))  # fallback: ceil(20/8)*8 - 20 = 4 pads / 20 real
+    eng.run_to_completion()
+    st = eng.bucket_stats()
+    assert st["fallbacks"] == 1 and st["hits"]["8"] == 1
+    assert st["pad_tokens"] == 3 + 4
+    assert st["real_tokens"] == 5 + 20
+    assert st["pad_overhead"] == pytest.approx(7 / 25)
+    # same contract on the paged engine ("real" = tokens the extend
+    # computed, so the fallback's chunk-grid pads count there too)
+    pgd = _engine(cfg, params, page_size=8, prefill_buckets=(8,))
+    pgd.submit(mk(2, 20))
+    pgd.run_to_completion()
+    st = pgd.bucket_stats()
+    assert st["fallbacks"] == 1
+    assert st["pad_tokens"] == 4 and st["real_tokens"] == 20
+
+
 def test_bucket_validation(cfg, params):
-    with pytest.raises(NotImplementedError, match="paged"):
-        _engine(cfg, params, page_size=8, prefill_buckets=BUCKETS)
+    # buckets + paged pool is a legal combination now (padded write
+    # barrier): the ladder reaches the scheduler so admission reserves
+    # by the same bucketed-vs-chunk rule the engine dispatches by
+    eng = _engine(cfg, params, page_size=8, prefill_buckets=BUCKETS)
+    assert eng.sched.prefill_buckets == BUCKETS
     with pytest.raises(ValueError, match="out of range"):
         _engine(cfg, params, prefill_buckets=(0, 8))
     with pytest.raises(ValueError, match="out of range"):

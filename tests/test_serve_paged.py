@@ -29,6 +29,15 @@ import jax
 import jax.numpy as jnp
 
 import repro  # noqa: F401
+from conftest import (
+    CACHE_LEN,
+    CHUNK,
+    N_PG,
+    PAGE,
+    logical_rows as _logical_rows,
+    make_engine,
+    run_with_row_snapshots,
+)
 from repro.configs import get_config
 from repro.models import init_params
 from repro.serve.batcher import ContinuousBatcher
@@ -39,28 +48,9 @@ from repro.serve.scheduler import (
     Request,
 )
 
-CACHE_LEN = 32
-CHUNK = 8
-PAGE = 8
-N_PG = CACHE_LEN // PAGE
-
-
-@pytest.fixture(scope="module")
-def cfg():
-    return get_config("gemma-2b").smoke()
-
-
-@pytest.fixture(scope="module")
-def params(cfg):
-    return init_params(cfg, jax.random.key(0))
-
 
 def _engine(cfg, params, **kw):
-    kw.setdefault("n_slots", 3)
-    kw.setdefault("cache_len", CACHE_LEN)
-    kw.setdefault("prefill_chunk", CHUNK)
-    kw.setdefault("page_size", PAGE)
-    return ContinuousBatcher(cfg, params, **kw)
+    return make_engine(cfg, params, paged=True, **kw)
 
 
 def _prefix_reqs(cfg, n, plen, shared, max_new, seed=3):
@@ -74,22 +64,9 @@ def _prefix_reqs(cfg, n, plen, shared, max_new, seed=3):
     ]
 
 
-def _logical_rows(eng, table_row):
-    """Gather one slot's logical (L, cache_len, g, hd) K/V rows out of the
-    pool through a page-table row snapshot."""
-    pages = np.asarray(table_row)
-    rows = {}
-    for name in ("k", "v"):
-        pool = np.asarray(eng.cache[name])  # (L, P, page, g, hd)
-        L, _, page, g, hd = pool.shape
-        rows[name] = pool[:, pages].reshape(L, len(pages) * page, g, hd)
-    return rows
-
-
 def _solo_run(cfg, params, req, n_out):
     """Un-paged single-slot reference: (tokens, k_row, v_row)."""
-    eng = ContinuousBatcher(cfg, params, n_slots=1, cache_len=CACHE_LEN,
-                            prefill_chunk=CHUNK)
+    eng = make_engine(cfg, params, n_slots=1)
     eng.submit(Request(rid=req.rid, prompt=list(req.prompt),
                        max_new=req.max_new))
     done = eng.run_to_completion()
@@ -289,6 +266,144 @@ def test_capacity_errors_report_derived_legal_values(cfg, params):
         _engine(cfg, params, prefill_chunk=7)
     with pytest.raises(ValueError, match="nearest legal cache_len: 512 or"):
         _engine(cfg, params, cache_len=513, page_size=None)
+
+
+# ------------------- padded write barrier (bucketed prefill, DESIGN §13)
+def test_bucketed_paged_bitwise_vs_chunk_loop_shared_prefix(cfg, params):
+    """THE padded-write-barrier contract: length-bucketed single-call
+    prefill on the paged, prefix-sharing pool produces tokens AND logical
+    KV rows bitwise-identical to the monolithic chunk loop.  Pad
+    positions ride the per-slot scratch page — never a mapped, shared, or
+    retained physical page — so dedup'd prefixes stay byte-exact while
+    every prompt prefills in ONE extend call of its bucket width."""
+    def mk_reqs():
+        shared = _prefix_reqs(cfg, 3, plen=19, shared=16, max_new=6)
+        rng = np.random.default_rng(29)
+        extras = [Request(rid=10 + i, prompt=[int(t) for t in rng.integers(
+            1, cfg.vocab, p)], max_new=6) for i, p in enumerate((5, 11, 23))]
+        return shared + extras
+
+    eng_b = _engine(cfg, params, prefill_buckets=(8, 16, 32),
+                    rns_verify=True)
+    done_b, rows_b = run_with_row_snapshots(eng_b, mk_reqs())
+    eng_c = make_engine(cfg, params, rns_verify=True)  # monolithic loop
+    done_c, rows_c = run_with_row_snapshots(eng_c, mk_reqs())
+
+    assert sorted(done_b) == sorted(done_c)
+    for rid, rb in done_b.items():
+        assert rb.out == done_c[rid].out
+        (bk, bv), (ck, cv) = rows_b[rid], rows_c[rid]
+        np.testing.assert_array_equal(bk, ck)
+        np.testing.assert_array_equal(bv, cv)
+    # every retirement's fingerprints verified clean, on BOTH engines
+    assert eng_b.verify_log and all(eng_b.verify_log.values())
+    assert all(eng_c.verify_log.values())
+    st = eng_b.bucket_stats()
+    assert sum(st["hits"].values()) == 6 and st["fallbacks"] == 0
+    pg = eng_b.page_stats()
+    assert pg["dedup_hits"] >= 2 * (16 // PAGE)  # prefix shared via pages
+    assert pg["pages_in_use"] == 0  # every span + scratch page released
+    assert pg["fingerprints"]["failed"] == 0
+    sizes = eng_b.jit_cache_sizes()
+    assert sizes["decode"] == 1 and sizes["extend"] == 3  # one per width
+
+
+def test_bucketed_full_prefix_hit_cow_bitwise(cfg, params):
+    """A full-prefix hit restarting mid-page (prefill_chunk < page_size)
+    must CoW the final shared page and then extend through a PADDED
+    bucket: the pads ride the scratch page, the CoW'd page takes only the
+    real tail, and tokens still match the solo run bitwise."""
+    rng = np.random.default_rng(11)
+    prefix = [int(t) for t in rng.integers(1, cfg.vocab, 16)]
+    eng = _engine(cfg, params, prefill_chunk=4,
+                  prefill_buckets=(8, 16, 32), rns_verify=True)
+    eng.submit(Request(rid="warm", prompt=prefix + [5], max_new=3))
+    eng.run_to_completion()
+    eng.submit(Request(rid="hit", prompt=list(prefix), max_new=4))
+    done = eng.run_to_completion()
+    assert eng.page_stats()["cow_copies"] >= 1
+    hit = [r for r in done if r.rid == "hit"][0]
+    sout, _, _ = _solo_run(cfg, params, hit, len(hit.out))
+    assert hit.out == sout
+    assert all(eng.verify_log.values())
+    assert eng.bucket_stats()["hits"]["8"] >= 1  # the padded 4-token tail
+
+
+def test_bucket_pads_write_only_span_pages_and_scratch(cfg, params):
+    """Direct pool-level check of the barrier: a bucketed prefill whose
+    bucket overshoots both the prompt AND the table row (pad positions
+    clip past cache_len) may touch ONLY the slot's own span page and the
+    transient scratch page.  Every other physical page — the retained
+    prefix pages it maps, the parking page the clipped pads would
+    otherwise junk — is byte-identical before and after."""
+    rng = np.random.default_rng(23)
+    prefix = [int(t) for t in rng.integers(1, cfg.vocab, 16)]
+    eng = _engine(cfg, params, prefill_buckets=(32,), rns_verify=True)
+    eng.submit(Request(rid="pub", prompt=prefix + [7, 8, 9], max_new=2))
+    eng.run_to_completion()
+    before = {n: np.asarray(eng.cache[n]).copy() for n in ("k", "v")}
+    reg_pids = set(eng.sched.registry.by_pid)
+    assert reg_pids  # the prefix pages are retained, shareable content
+
+    grabbed = []
+    orig = eng.sched.alloc_scratch
+
+    def spy(slot):
+        pid, acts = orig(slot)
+        grabbed.append(pid)
+        return pid, acts
+
+    eng.sched.alloc_scratch = spy
+    try:
+        # 6-token tail behind the shared prefix, forced through the one
+        # oversized bucket: 26 pads, positions 32..47 clip past the table
+        eng.submit(Request(rid="sub", prompt=prefix + [11] * 6, max_new=2))
+        eng.try_admit()  # admission == the single bucketed extend
+    finally:
+        eng.sched.alloc_scratch = orig
+    assert grabbed and len(grabbed) == 1
+    scratch = grabbed[0]
+    slot = eng.sched.decoding_slots()[0]
+    row = list(eng.sched.table[slot.index])
+    assert scratch not in row  # never mapped through the table
+    assert eng.sched.alloc.refcount[scratch] == 0  # freed after the call
+    allowed = {row[2], scratch}  # real span [16, 22) -> logical page 2
+    assert reg_pids.isdisjoint(allowed)
+    after = {n: np.asarray(eng.cache[n]) for n in ("k", "v")}
+    for pid in range(eng.n_pages):
+        if pid in allowed:
+            continue
+        for name in ("k", "v"):
+            np.testing.assert_array_equal(after[name][:, pid],
+                                          before[name][:, pid])
+    eng.run_to_completion()
+    assert all(eng.verify_log.values())
+
+
+def test_bucketed_admission_reserves_scratch_headroom():
+    """Host-side reservation math for the bucketed path: real-span pages
+    in page units PLUS one scratch unit, consumed exactly by plan_write +
+    alloc_scratch; the chunk-loop plan for the same request reserves by
+    the chunk-grid pad end instead (no scratch)."""
+    s = PagedScheduler(2, 32, page_size=8, n_pages=9, prefill_chunk=8,
+                       prefill_buckets=(8, 16, 32))
+    assert s.bucket_for(3) == 8 and s.bucket_for(9) == 16
+    assert s.bucket_for(33) is None  # over-bucket -> chunk-loop fallback
+    s.submit(Request(rid="a", prompt=list(range(10)), max_new=5, eos=-1))
+    slot = s.admit_next()
+    assert slot is not None
+    # ceil((10 + 5 - 1) / 8) = 2 span pages + 1 scratch page
+    assert slot.reserved_left == 3
+    s.plan_write(slot, 0, 10)  # maps the two span pages
+    pid, _ = s.alloc_scratch(slot)
+    assert pid not in s.table[slot.index]
+    assert s.alloc.refcount[pid] == 1 and not s.alloc.is_retained(pid)
+    s.free_scratch(pid)
+    assert s.alloc.refcount[pid] == 0 and not s.alloc.is_retained(pid)
+    assert slot.reserved_left == 0  # budget exactly spent
+    c = PagedScheduler(2, 32, page_size=8, n_pages=9, prefill_chunk=8)
+    c.submit(Request(rid="a", prompt=list(range(10)), max_new=5, eos=-1))
+    assert c.admit_next().reserved_left == 2  # chunk grid, no scratch
 
 
 def test_scheduler_deferral_is_pure_host_logic():
